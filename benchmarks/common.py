@@ -1,0 +1,83 @@
+"""Shared benchmark scaffolding: the paper's §5.1 experimental setup."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    SimConfig,
+    build_topology,
+    container_costs,
+    fat_tree,
+    feasible_rates,
+    jellyfish,
+    poisson_arrivals,
+    random_apps,
+    t_heron_placement,
+    trace_synthetic,
+)
+
+QUICK = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+T_SIM = 300 if QUICK else 1500
+T_COHORT = 300 if QUICK else 800
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+@dataclasses.dataclass
+class System:
+    name: str
+    topo: object
+    net: object
+    rates: np.ndarray
+    placement: np.ndarray
+
+
+_SYSTEMS: dict = {}
+
+
+def paper_system(topology: str = "fat-tree", seed: int = 0) -> System:
+    """5 apps, depth 3-5, 3-6 components, mu 3-5 (paper §5.1), on a 16-server
+    fabric with 2 containers each."""
+    key = (topology, seed)
+    if key in _SYSTEMS:
+        return _SYSTEMS[key]
+    rng = np.random.default_rng(seed)
+    topo = build_topology(random_apps(rng, n_apps=5), gamma=24.0)
+    if topology == "fat-tree":
+        server_dist, _ = fat_tree(4)
+    else:
+        server_dist, _ = jellyfish(np.random.default_rng(seed + 1), 24, 16)
+    net = container_costs(topology, server_dist)
+    rates = feasible_rates(topo, utilization=0.7)
+    placement = t_heron_placement(topo, net, rates, max_per_container=8)
+    sys = System(topology, topo, net, rates, placement)
+    _SYSTEMS[key] = sys
+    return sys
+
+
+def arrivals_for(sys: System, kind: str, T: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if kind == "poisson":
+        return poisson_arrivals(rng, sys.rates, T + 64)
+    return trace_synthetic(rng, sys.rates, T + 64)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

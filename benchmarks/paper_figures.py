@@ -1,0 +1,112 @@
+"""Reproductions of the paper's Figures 4-6 (one function per figure)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SimConfig, run_cohort_sim, run_sim
+from repro.core.prediction import all_true_negative, false_positive, mse, predict_series
+
+from .common import QUICK, T_COHORT, T_SIM, Row, arrivals_for, paper_system, timer
+
+
+def fig4_response_vs_w() -> list[Row]:
+    """Fig. 4: average response time vs lookahead window size W."""
+    rows = []
+    Ws = [0, 1, 2, 4, 6, 10] if QUICK else [0, 1, 2, 3, 4, 5, 6, 8, 10, 12]
+    topos = ["fat-tree"] if QUICK else ["fat-tree", "jellyfish"]
+    for topology in topos:
+        sys = paper_system(topology)
+        for kind in ("poisson", "trace"):
+            arr = arrivals_for(sys, kind, T_COHORT)
+            vals = []
+            with timer() as t:
+                for W in Ws:
+                    r = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, None,
+                                       T_COHORT, SimConfig(V=1.0, window=W))
+                    vals.append(r.avg_response)
+                sh = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, None,
+                                    T_COHORT, SimConfig(V=1.0, window=0, scheduler="shuffle"))
+            derived = ";".join(f"W{w}={v:.2f}" for w, v in zip(Ws, vals))
+            derived += f";shuffle={sh.avg_response:.2f}"
+            rows.append(Row(f"fig4/{topology}/{kind}",
+                            t.dt / (len(Ws) * T_COHORT) * 1e6, derived))
+    return rows
+
+
+def fig5_backlog_and_cost_vs_v() -> list[Row]:
+    """Fig. 5(a,b): backlog vs V; Fig. 5(c,d): comm cost vs V."""
+    rows = []
+    Vs = [1, 2, 5, 10, 16, 25, 50] if QUICK else [1, 2, 5, 10, 16, 25, 40, 50, 70, 100]
+    topos = ["fat-tree"] if QUICK else ["fat-tree", "jellyfish"]
+    for topology in topos:
+        sys = paper_system(topology)
+        arr = arrivals_for(sys, "trace", T_SIM)
+        for W in (0, 5):
+            backlogs, costs = [], []
+            with timer() as t:
+                for V in Vs:
+                    r = run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM,
+                                SimConfig(V=float(V), window=W))
+                    backlogs.append(r.avg_backlog)
+                    costs.append(r.avg_cost)
+                sh = run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM,
+                             SimConfig(V=1.0, window=0, scheduler="shuffle"))
+            rows.append(Row(
+                f"fig5ab/{topology}/W{W}", t.dt / (len(Vs) * T_SIM) * 1e6,
+                ";".join(f"V{v}={b:.0f}" for v, b in zip(Vs, backlogs))
+                + f";shuffle={sh.avg_backlog:.0f}",
+            ))
+            rows.append(Row(
+                f"fig5cd/{topology}/W{W}", t.dt / (len(Vs) * T_SIM) * 1e6,
+                ";".join(f"V{v}={c:.1f}" for v, c in zip(Vs, costs))
+                + f";shuffle={sh.avg_cost:.1f}",
+            ))
+    return rows
+
+
+def fig6ab_predictors() -> list[Row]:
+    """Fig. 6(a,b): cost / response under the five imperfect predictors, W=1."""
+    rows = []
+    sys = paper_system("fat-tree")
+    arr = arrivals_for(sys, "trace", T_COHORT)
+    Vs = [1, 5, 10, 20] if QUICK else [1, 2, 5, 10, 15, 20, 30]
+    preds = {"perfect": None}
+    rng = np.random.default_rng(5)
+    for name in ("kalman", "distr", "prophet", "ma", "ewma"):
+        preds[name] = predict_series(name, arr, rng)
+    preds["none"] = all_true_negative(arr)
+
+    for name, pred in preds.items():
+        err = 0.0 if pred is None else mse(pred[:T_COHORT], arr[:T_COHORT])
+        costs, resps = [], []
+        with timer() as t:
+            for V in Vs:
+                r = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, pred,
+                                   T_COHORT, SimConfig(V=float(V), window=1))
+                costs.append(r.avg_cost)
+                resps.append(r.avg_response)
+        d = ";".join(f"V{v}:cost={c:.1f}:resp={x:.2f}" for v, c, x in zip(Vs, costs, resps))
+        rows.append(Row(f"fig6ab/{name}", t.dt / (len(Vs) * T_COHORT) * 1e6,
+                        f"mse={err:.2f};{d}"))
+    return rows
+
+
+def fig6c_misprediction_extremes() -> list[Row]:
+    """Fig. 6(c): All-True-Negative and False-Positive(x), response vs W."""
+    rows = []
+    sys = paper_system("fat-tree")
+    arr = arrivals_for(sys, "poisson", T_COHORT)
+    Ws = [0, 2, 4, 6, 10] if QUICK else [0, 1, 2, 3, 4, 6, 8, 10]
+    cases = {"perfect": None, "all-true-negative": all_true_negative(arr)}
+    for x in (10, 20, 30):
+        cases[f"false-positive-{x}"] = false_positive(arr, x, np.random.default_rng(x))
+    for name, pred in cases.items():
+        vals = []
+        with timer() as t:
+            for W in Ws:
+                r = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, pred,
+                                   T_COHORT, SimConfig(V=1.0, window=W))
+                vals.append(r.avg_response)
+        rows.append(Row(f"fig6c/{name}", t.dt / (len(Ws) * T_COHORT) * 1e6,
+                        ";".join(f"W{w}={v:.2f}" for w, v in zip(Ws, vals))))
+    return rows

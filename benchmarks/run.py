@@ -1,0 +1,41 @@
+"""Benchmark driver — one section per paper table/figure plus framework
+microbenchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+Set REPRO_BENCH_FULL=1 for the full (paper-scale) sweeps.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import paper_figures, systems_bench
+
+    sections = [
+        ("fig4", paper_figures.fig4_response_vs_w),
+        ("fig5", paper_figures.fig5_backlog_and_cost_vs_v),
+        ("fig6ab", paper_figures.fig6ab_predictors),
+        ("fig6c", paper_figures.fig6c_misprediction_extremes),
+        ("scheduler_scale", systems_bench.scheduler_scale),
+        ("kernels", systems_bench.kernels_micro),
+        ("moe_router", systems_bench.moe_router_bench),
+        ("dispatcher", systems_bench.dispatcher_bench),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in sections:
+        if only and only not in name:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Framework-level microbenchmarks: scheduler scaling (§4.2 complexity),
+kernels, MoE routers, and the POTUS serving dispatcher."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_topology, container_costs, fat_tree, make_problem, potus_schedule
+from repro.core.topology import Component
+
+from .common import QUICK, Row, timer
+
+
+def _fleet(n_replicas: int, parallel_chains: int = 4):
+    """A wide serving fleet topology: chains of depth 3 with n_replicas each."""
+    apps = []
+    for a in range(parallel_chains):
+        apps.append([
+            Component("src", a, True, parallelism=max(n_replicas // 8, 1), successors=(1,)),
+            Component("serve", a, False, parallelism=n_replicas, proc_capacity=4.0,
+                      successors=(2,)),
+            Component("sink", a, False, parallelism=max(n_replicas // 4, 1),
+                      proc_capacity=8.0),
+        ])
+    return build_topology(apps, gamma=32.0)
+
+
+def scheduler_scale() -> list[Row]:
+    """POTUS decision latency vs fleet size (jit XLA path vs Pallas price)."""
+    rows = []
+    sizes = [8, 32, 128] if QUICK else [8, 32, 128, 256, 512]
+    for n in sizes:
+        topo = _fleet(n)
+        I = topo.n_instances
+        server_dist, _ = fat_tree(4)
+        net = container_costs(f"fleet-{n}", server_dist, containers_per_server=8)
+        rng = np.random.default_rng(0)
+        placement = rng.integers(0, net.n_containers, I).astype(np.int32)
+        prob = make_problem(topo, net, placement)
+        q_in = jnp.asarray(rng.uniform(0, 10, I).astype(np.float32))
+        q_out = jnp.asarray(rng.uniform(0, 10, (I, topo.n_components)).astype(np.float32))
+        must = jnp.zeros_like(q_out)
+        U = jnp.asarray(net.U)
+
+        for path, use_pallas in (("xla", False), ("pallas-interp", True)):
+            X = potus_schedule(prob, U, q_in, q_out, must, 2.0, 1.0, use_pallas=use_pallas)
+            X.block_until_ready()
+            n_it = 20 if QUICK else 100
+            t0 = time.perf_counter()
+            for _ in range(n_it):
+                potus_schedule(prob, U, q_in, q_out, must, 2.0, 1.0,
+                               use_pallas=use_pallas).block_until_ready()
+            dt = (time.perf_counter() - t0) / n_it
+            rows.append(Row(f"scheduler/{path}/I{I}", dt * 1e6,
+                            f"instances={I};decisions_per_s={1/dt:.0f}"))
+    return rows
+
+
+def kernels_micro() -> list[Row]:
+    """Interpret-mode kernel calls vs jnp references (correctness-weighted
+    latency; real perf numbers require TPU hardware)."""
+    from repro.kernels.flash_attention import flash_attention_call
+    from repro.kernels import ref as kref
+
+    rows = []
+    B, Hq, Hkv, S, D = 1, 8, 2, 512, 64
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(keys[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(keys[2], (B, Hkv, S, D), jnp.float32)
+
+    for name, fn in (
+        ("flash_attention/interp", lambda: flash_attention_call(q, k, v)),
+        ("flash_attention/xla_ref", lambda: kref.flash_attention_reference(q, k, v)),
+    ):
+        out = fn()
+        jax.block_until_ready(out)
+        n = 3 if QUICK else 10
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) / n
+        flops = 4 * B * Hq * S * S * D
+        rows.append(Row(f"kernel/{name}", dt * 1e6, f"gflops_rate={flops/dt/1e9:.2f}"))
+    return rows
+
+
+def moe_router_bench() -> list[Row]:
+    """Beyond-paper: POTUS (Lyapunov virtual-queue) router vs plain top-k."""
+    from repro.configs import get_config
+    from repro.models.common import init_params
+    from repro.models.moe import init_router_state, moe_ffn, moe_template
+
+    cfg = get_config("granite_moe_1b").reduced().with_(
+        n_experts=16, top_k=2, capacity_factor=1.25, d_model=128
+    )
+    tmpl = moe_template(cfg)
+    p = init_params(jax.random.PRNGKey(0), tmpl, jnp.float32)
+    rng = np.random.default_rng(0)
+    # skewed tokens -> hot experts
+    base = rng.standard_normal((1, 1, cfg.d_model)).astype(np.float32)
+    x = jnp.asarray(np.concatenate([
+        np.repeat(base, 192, axis=1) + 0.05 * rng.standard_normal((1, 192, cfg.d_model)),
+        rng.standard_normal((1, 64, cfg.d_model)).astype(np.float32),
+    ], axis=1).astype(np.float32))
+
+    rows = []
+    for router in ("topk", "potus"):
+        c = cfg.with_(router=router)
+        rs = init_router_state(c)
+        imb, drop = [], []
+        with timer() as t:
+            for _ in range(10):
+                _, aux = moe_ffn(p, x, c, rs)
+                if router == "potus":
+                    rs = aux["router_state"]
+                load = np.asarray(aux["load"])
+                imb.append(load.max() / max(load.mean(), 1e-9))
+                drop.append(float(aux["dropped_frac"]))
+        rows.append(Row(f"moe_router/{router}", t.dt / 10 * 1e6,
+                        f"max_over_mean_load={np.mean(imb[3:]):.2f};dropped={np.mean(drop[3:]):.3f}"))
+    return rows
+
+
+def dispatcher_bench() -> list[Row]:
+    """POTUS vs Shuffle request routing across heterogeneous replicas."""
+    from repro.serving.dispatcher import DispatcherConfig, PotusDispatcher
+
+    rng = np.random.default_rng(0)
+    F, R = 2, 8
+    hosts = np.arange(R) % 4
+    host_costs = (np.abs(np.arange(4)[:, None] - np.arange(4)[None, :]) * 2.0).astype(np.float32)
+    rates = np.array([8, 8, 4, 4, 2, 2, 1, 1], float)
+    T = 200 if QUICK else 1000
+    arrivals = rng.poisson(7.0, size=(T, F)).astype(float)
+
+    rows = []
+    for policy in ("potus", "shuffle"):
+        disp = PotusDispatcher(F, hosts, np.array([0, 2]), host_costs, rates,
+                               DispatcherConfig(V=1.0, beta=1.0, gamma=64.0))
+        backlog = np.zeros(R)
+        tot_b, tot_cost = 0.0, 0.0
+        with timer() as t:
+            for ts in range(T):
+                if policy == "potus":
+                    assign = disp.route(arrivals[ts], backlog)
+                    inflow = assign.sum(axis=0)
+                    cost = float((assign * host_costs[np.ix_(np.array([0, 2]), hosts)]).sum())
+                else:
+                    inflow = np.bincount(
+                        rng.integers(0, R, int(arrivals[ts].sum())), minlength=R
+                    ).astype(float)
+                    fhost = np.array([0, 2])[rng.integers(0, F, int(arrivals[ts].sum()))]
+                    cost = 0.0  # computed coarsely below
+                    cost = float(host_costs[fhost, hosts[rng.integers(0, R, len(fhost))]].sum())
+                backlog = np.maximum(backlog + inflow - rates, 0.0)
+                tot_b += backlog.sum()
+                tot_cost += cost
+        rows.append(Row(f"dispatcher/{policy}", t.dt / T * 1e6,
+                        f"avg_backlog={tot_b/T:.1f};avg_cost={tot_cost/T:.1f}"))
+    return rows

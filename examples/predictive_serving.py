@@ -1,0 +1,67 @@
+"""Predictive serving: the paper's headline applied to an LM fleet.
+
+A serving fleet = one frontend (spout) dispatching requests (tuples) to
+heterogeneous replicas (bolt instances with different service rates, i.e. a
+straggler scenario). With a lookahead window, predicted requests are
+pre-admitted and pre-served, so bursts complete near-instantly on arrival —
+Fig. 4's mechanism measured with the exact per-cohort response-time engine.
+
+  PYTHONPATH=src python examples/predictive_serving.py
+"""
+import numpy as np
+
+from repro.core import (
+    Component,
+    SimConfig,
+    build_topology,
+    container_costs,
+    run_cohort_sim,
+)
+from repro.core.network import NetworkCosts
+from repro.core.prediction import ewma_predict
+
+
+def make_fleet():
+    app = [
+        Component("frontend", 0, True, parallelism=1, successors=(1,)),
+        Component("serve", 0, False, parallelism=3, proc_capacity=4.0),
+    ]
+    topo = build_topology([app], gamma=64.0)
+    # heterogeneous replicas: one fast, one nominal, one straggler
+    topo.inst_mu[topo.instances_of(1)] = [6.0, 3.0, 1.5]
+    hosts = np.array([[0, 1, 2], [1, 0, 1], [2, 1, 0]], np.float32)
+    net = NetworkCosts("fleet", 3, 3, hosts, np.arange(3, dtype=np.int32), hosts)
+    placement = np.array([0, 0, 1, 2], dtype=np.int32)  # frontend with replica 0
+    return topo, net, placement
+
+
+def main() -> None:
+    topo, net, placement = make_fleet()
+    T = 500
+    rng = np.random.default_rng(0)
+    lam = 2.0 + 5.0 * (np.arange(T + 40) % 40 < 8)  # periodic bursts
+    arrivals = np.zeros((T + 40, topo.n_instances, topo.n_components), np.float32)
+    arrivals[:, 0, 1] = rng.poisson(lam)
+
+    print("bursty traffic (2 req/slot baseline, 7 req/slot bursts), replicas 6/3/1.5 req/slot\n")
+    for W in (0, 1, 2, 4, 8):
+        r = run_cohort_sim(topo, net, placement, arrivals, None, T,
+                           SimConfig(V=0.5, beta=1.0, window=W))
+        print(f"  perfect prediction W={W}: avg response {r.avg_response:5.2f} slots "
+              f"(p95 {r.p95_response:5.1f}), comm cost {r.avg_cost:5.1f}/slot")
+
+    # imperfect (EWMA) prediction of the bursty stream
+    pred = np.zeros_like(arrivals)
+    pred[:, 0, 1] = np.maximum(np.rint(ewma_predict(arrivals[:, 0, 1], alpha=0.5)), 0)
+    r = run_cohort_sim(topo, net, placement, arrivals, pred, T,
+                       SimConfig(V=0.5, beta=1.0, window=2))
+    print(f"  EWMA prediction    W=2: avg response {r.avg_response:5.2f} slots "
+          f"(p95 {r.p95_response:5.1f})")
+    sh = run_cohort_sim(topo, net, placement, arrivals, None, T,
+                        SimConfig(V=0.5, scheduler="shuffle"))
+    print(f"  Shuffle (Heron default): avg response {sh.avg_response:5.2f} slots "
+          f"(p95 {sh.p95_response:5.1f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: POTUS on a Heron-style stream-processing system.
+
+Builds the paper's §5.1 setting (5 random apps on a fat-tree, T-Heron
+placement), runs POTUS vs Heron's Shuffle, and shows the predictive-window
+effect on response time (Fig. 4's headline).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    SimConfig,
+    build_topology,
+    container_costs,
+    fat_tree,
+    feasible_rates,
+    poisson_arrivals,
+    random_apps,
+    run_cohort_sim,
+    run_sim,
+    t_heron_placement,
+)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    topo = build_topology(random_apps(rng, n_apps=5), gamma=24.0)
+    server_dist, _ = fat_tree(4)
+    net = container_costs("fat-tree", server_dist)
+    rates = feasible_rates(topo, utilization=0.7)
+    placement = t_heron_placement(topo, net, rates, max_per_container=8)
+    print(f"system: {topo.n_apps} apps, {topo.n_components} components, "
+          f"{topo.n_instances} instances on {net.n_containers} containers")
+
+    T = 400
+    arrivals = poisson_arrivals(rng, rates, T + 40)
+
+    print("\n-- communication cost & backlog (V trade-off, Fig. 5) --")
+    for V in (1.0, 10.0, 50.0):
+        r = run_sim(topo, net, placement, arrivals, T, SimConfig(V=V, window=0))
+        print(f"  POTUS V={V:5.1f}: cost={r.avg_cost:7.1f}  backlog={r.avg_backlog:7.0f}")
+    s = run_sim(topo, net, placement, arrivals, T, SimConfig(V=1.0, scheduler="shuffle"))
+    print(f"  Shuffle      : cost={s.avg_cost:7.1f}  backlog={s.avg_backlog:7.0f}")
+
+    print("\n-- response time vs lookahead window (Fig. 4) --")
+    for W in (0, 2, 6, 12):
+        r = run_cohort_sim(topo, net, placement, arrivals, None, T,
+                           SimConfig(V=1.0, window=W))
+        print(f"  POTUS W={W:2d}: avg response = {r.avg_response:5.2f} slots "
+              f"(p95 {r.p95_response:5.1f})")
+    sh = run_cohort_sim(topo, net, placement, arrivals, None, T,
+                        SimConfig(V=1.0, scheduler="shuffle"))
+    print(f"  Shuffle   : avg response = {sh.avg_response:5.2f} slots")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""POTUS core — the paper's contribution as a composable JAX library.
+
+Layers: DAG/topology model, placement, network costs, queue dynamics
+(eqs. 2-10), Algorithm 1 (vectorized JAX + exact python oracle), predictors,
+and two simulation engines (scan-based JAX engine; per-cohort response-time
+engine).
+"""
+from .topology import Component, Topology, build_topology, random_apps, linear_app, diamond_app
+from .network import NetworkCosts, jellyfish, fat_tree, container_costs
+from .placement import t_heron_placement, instance_traffic
+from .potus import SchedProblem, make_problem, potus_prices, potus_schedule
+from .baselines import shuffle_schedule, jsq_schedule
+from .queues import SimState, init_state, effective_qout, slot_update
+from .simulator import SimConfig, SimResult, run_sim
+from .cohort import CohortResult, run_cohort_sim
+from .workload import poisson_arrivals, trace_synthetic, feasible_rates, spout_rate_matrix
+from . import prediction
+
+__all__ = [
+    "Component", "Topology", "build_topology", "random_apps", "linear_app", "diamond_app",
+    "NetworkCosts", "jellyfish", "fat_tree", "container_costs",
+    "t_heron_placement", "instance_traffic",
+    "SchedProblem", "make_problem", "potus_prices", "potus_schedule",
+    "shuffle_schedule", "jsq_schedule",
+    "SimState", "init_state", "effective_qout", "slot_update",
+    "SimConfig", "SimResult", "run_sim",
+    "CohortResult", "run_cohort_sim",
+    "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",
+]

@@ -1,0 +1,70 @@
+"""Baseline tuple-scheduling schemes (paper §5.1 "Compared Baselines").
+
+``shuffle_schedule`` is Heron's default: dispatch produced tuples uniformly at
+random among the next component's instances (fluid even split; a stochastic
+multinomial variant is available for the cohort engine). ``jsq_schedule``
+(join-shortest-queue) and ``round_robin_schedule`` are extra context
+baselines. All share the signature of ``potus.potus_schedule``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .potus import SchedProblem
+
+__all__ = ["shuffle_schedule", "jsq_schedule"]
+
+
+def _ship_amounts(prob: SchedProblem, q_out: jax.Array, must_send: jax.Array) -> jax.Array:
+    """(I, C) amount shipped per source toward each successor component:
+    everything available, throttled by gamma proportionally (never below the
+    mandatory same-slot arrivals)."""
+    total = q_out.sum(axis=1, keepdims=True)
+    scale = jnp.where(total > 0, jnp.minimum(1.0, prob.gamma[:, None] / jnp.maximum(total, 1e-9)), 0.0)
+    return jnp.maximum(q_out * scale, must_send)
+
+
+@partial(jax.jit, static_argnames=())
+def shuffle_schedule(
+    prob: SchedProblem,
+    U: jax.Array,
+    q_in: jax.Array,
+    q_out: jax.Array,
+    must_send: jax.Array,
+    V: float = 0.0,
+    beta: float = 0.0,
+) -> jax.Array:
+    ship = _ship_amounts(prob, q_out, must_send)  # (I, C)
+    I = q_in.shape[0]
+    per_target = jnp.take_along_axis(
+        ship, prob.inst_comp[None, :].repeat(I, axis=0), axis=1
+    ) / prob.comp_count[prob.inst_comp][None, :]
+    return jnp.where(prob.edge_mask, per_target, 0.0)
+
+
+@partial(jax.jit, static_argnames=())
+def jsq_schedule(
+    prob: SchedProblem,
+    U: jax.Array,
+    q_in: jax.Array,
+    q_out: jax.Array,
+    must_send: jax.Array,
+    V: float = 0.0,
+    beta: float = 0.0,
+) -> jax.Array:
+    """Join-shortest-queue: each component's shipment goes to its instance
+    with the smallest input queue (ties -> lowest index)."""
+    ship = _ship_amounts(prob, q_out, must_send)  # (I, C)
+    I = q_in.shape[0]
+    C = prob.n_components
+    # winner[c] = argmin over instances of comp c of q_in
+    comp_onehot = jax.nn.one_hot(prob.inst_comp, C, dtype=q_in.dtype)  # (I, C)
+    masked_q = jnp.where(comp_onehot > 0, q_in[:, None], jnp.inf)  # (I, C)
+    winner = jnp.argmin(masked_q, axis=0)  # (C,)
+    target_is_winner = winner[prob.inst_comp] == jnp.arange(I)  # (I,) bool over targets
+    per_target = jnp.take_along_axis(ship, prob.inst_comp[None, :].repeat(I, axis=0), axis=1)
+    X = jnp.where(prob.edge_mask & target_is_winner[None, :], per_target, 0.0)
+    return X

@@ -1,0 +1,154 @@
+"""POTUS — Predictive Online Tuple Scheduling (paper Algorithm 1), in JAX.
+
+Per time slot, each instance ``i`` solves its slice of the drift-plus-penalty
+subproblem (15): ship tuples to successor instances ``i'`` in ascending order
+of the price
+
+    l[i,i'](t) = V * U[k(i), k(i')] + Q_in[i'](t) - beta * Q_out[i, c(i')](t)
+
+considering only candidates with ``l < 0``, each shipment bounded by the
+remaining transmission capacity ``gamma_i`` and the (virtual) output-queue
+budget of the target component. Actual same-slot arrivals at spouts
+(``Q_rem(t, 0)``) are *always* dispatched (eq. 4 / Alg. 1 line 5-6), evenly
+across the successor component's instances if the candidate set is empty.
+
+Everything is vectorized: the price matrix is one fused broadcast, the greedy
+water-fill is a ``lax.fori_loop`` over at most ``max_succ`` picks, ``vmap``-ed
+over source instances. The price matrix also has a Pallas TPU kernel
+(`repro.kernels.potus_price`) used when ``use_pallas=True``.
+
+The scheduler is *fluid* (float tuple counts). On integral inputs the greedy
+allocations stay integral except for the even-split mandatory dispatch; the
+exact integer oracle lives in ``core.reference`` and the two are compared in
+tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import NetworkCosts
+from .topology import Topology
+
+__all__ = ["SchedProblem", "potus_prices", "potus_schedule", "make_problem"]
+
+_INF = jnp.inf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SchedProblem:
+    """Static description of the scheduling problem consumed per slot."""
+
+    edge_mask: jax.Array  # (I, I) bool — comp(i) -> comp(i') is a DAG edge
+    inst_comp: jax.Array  # (I,) int32
+    inst_container: jax.Array  # (I,) int32
+    gamma: jax.Array  # (I,) f32
+    comp_count: jax.Array  # (C,) f32 — parallelism per component
+    is_spout: jax.Array  # (I,) bool
+    max_succ: int = dataclasses.field(metadata=dict(static=True))
+    n_components: int = dataclasses.field(metadata=dict(static=True))
+
+
+def make_problem(topo: Topology, net: NetworkCosts, inst_container: np.ndarray) -> SchedProblem:
+    return SchedProblem(
+        edge_mask=jnp.asarray(topo.edge_mask_instances()),
+        inst_comp=jnp.asarray(topo.inst_comp),
+        inst_container=jnp.asarray(inst_container, dtype=jnp.int32),
+        gamma=jnp.asarray(topo.inst_gamma),
+        comp_count=jnp.asarray(topo.comp_parallelism, dtype=jnp.float32),
+        is_spout=jnp.asarray(topo.comp_is_spout[topo.inst_comp]),
+        max_succ=int(topo.max_out_instances()),
+        n_components=int(topo.n_components),
+    )
+
+
+def potus_prices(
+    prob: SchedProblem,
+    U: jax.Array,  # (K, K)
+    q_in: jax.Array,  # (I,)
+    q_out: jax.Array,  # (I, C)
+    V: float,
+    beta: float,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """(I, I) price matrix ``l`` (eq. 16); +inf on non-edges."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.potus_price(
+            U, q_in, q_out, prob.inst_container, prob.inst_comp, prob.edge_mask, V, beta
+        )
+    u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]  # (I, I)
+    qout_pair = jnp.take_along_axis(
+        q_out, prob.inst_comp[None, :].repeat(q_out.shape[0], axis=0), axis=1
+    )  # q_out[i, comp(i')]
+    l = V * u_pair + q_in[None, :] - beta * qout_pair
+    return jnp.where(prob.edge_mask, l, _INF)
+
+
+def _greedy_row(
+    l_row: jax.Array,  # (I,)
+    qout_row: jax.Array,  # (C,) output-queue budget of source i
+    gamma_i: jax.Array,  # ()
+    inst_comp: jax.Array,  # (I,)
+    max_succ: int,
+):
+    """Algorithm 1 lines 9-14 for one source instance."""
+    I = l_row.shape[0]
+
+    def body(_, carry):
+        x_row, budget, used, active = carry
+        cand = active & (l_row < 0.0) & jnp.isfinite(l_row)
+        l_eff = jnp.where(cand, l_row, _INF)
+        j = jnp.argmin(l_eff)
+        feasible = l_eff[j] < _INF
+        cj = inst_comp[j]
+        alloc = jnp.where(feasible, jnp.maximum(jnp.minimum(gamma_i - used, budget[cj]), 0.0), 0.0)
+        x_row = x_row.at[j].add(alloc)
+        budget = budget.at[cj].add(-alloc)
+        used = used + alloc
+        active = active & (jnp.arange(I) != j)
+        return x_row, budget, used, active
+
+    init = (jnp.zeros((I,), l_row.dtype), qout_row, jnp.array(0.0, l_row.dtype), jnp.ones((I,), bool))
+    x_row, budget, used, _ = jax.lax.fori_loop(0, max_succ, body, init)
+    return x_row, budget, used
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def potus_schedule(
+    prob: SchedProblem,
+    U: jax.Array,  # (K, K) per-slot container costs
+    q_in: jax.Array,  # (I,)
+    q_out: jax.Array,  # (I, C)
+    must_send: jax.Array,  # (I, C) — spout Q_rem(t, 0); zeros elsewhere
+    V: float,
+    beta: float,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """One slot of Algorithm 1 for every instance. Returns X (I, I)."""
+    I = q_in.shape[0]
+    l = potus_prices(prob, U, q_in, q_out, V, beta, use_pallas=use_pallas)
+
+    x, _, _ = jax.vmap(_greedy_row, in_axes=(0, 0, 0, None, None))(
+        l, q_out, prob.gamma, prob.inst_comp, prob.max_succ
+    )
+
+    # --- mandatory dispatch of actual arrivals (eq. 4, Alg. 1 line 5-6) ----
+    # shipped[i, c] = sum of x over instances of component c
+    comp_onehot = jax.nn.one_hot(prob.inst_comp, prob.n_components, dtype=x.dtype)  # (I, C)
+    shipped = x @ comp_onehot  # (I, C)
+    shortfall = jnp.maximum(must_send - shipped, 0.0)  # (I, C)
+    # even split over successor instances: x[i, j] += shortfall[i, comp(j)] / |I_C(comp(j))|
+    extra = jnp.where(
+        prob.edge_mask,
+        jnp.take_along_axis(shortfall, prob.inst_comp[None, :].repeat(I, axis=0), axis=1)
+        / prob.comp_count[prob.inst_comp][None, :],
+        0.0,
+    )
+    return x + extra

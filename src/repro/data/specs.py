@@ -1,0 +1,85 @@
+"""Input specs + synthetic batch builders per (architecture × shape cell).
+
+``input_specs(cfg, shape, kind)`` returns ``jax.ShapeDtypeStruct`` stand-ins
+(weak-type-correct, shardable, no device allocation) for the dry-run;
+``make_batch`` materializes small concrete batches for tests and examples.
+
+Modality frontends are STUBS per the brief: ``[audio]``/``[vlm]`` entries get
+precomputed frame/patch embeddings as inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.common import DTYPES
+from repro.models import model_zoo
+
+__all__ = ["input_specs", "make_batch", "decode_cache_specs"]
+
+
+def _train_specs(cfg: ArchConfig, B: int, S: int) -> dict:
+    cdt = DTYPES[cfg.compute_dtype]
+    if cfg.is_encoder:
+        return {
+            "embeddings": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        Np = min(cfg.n_frontend_tokens, S // 2)
+        St = S - Np
+        return {
+            "patches": jax.ShapeDtypeStruct((B, Np, cfg.d_model), cdt),
+            "tokens": jax.ShapeDtypeStruct((B, St), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Specs for the step function the cell lowers (train/prefill/decode)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return _train_specs(cfg, B, S)
+    if shape.kind == "prefill":
+        specs = _train_specs(cfg, B, S)
+        specs.pop("labels")
+        return specs
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": model_zoo.cache_spec(cfg, B, S),
+        }
+    raise ValueError(shape.kind)
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    return model_zoo.cache_spec(cfg, shape.global_batch, shape.seq_len)
+
+
+def make_batch(rng: np.random.Generator, cfg: ArchConfig, B: int, S: int,
+               kind: str = "train") -> dict:
+    """Concrete random batch matching ``input_specs`` (for tests/examples)."""
+    cdt = DTYPES[cfg.compute_dtype]
+    out: dict = {}
+    if cfg.is_encoder:
+        out["embeddings"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)).astype(np.float32), cdt
+        )
+    elif cfg.frontend == "vision_stub":
+        Np = min(cfg.n_frontend_tokens, S // 2)
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((B, Np, cfg.d_model)).astype(np.float32), cdt
+        )
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - Np)), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if kind == "train":
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    return out

@@ -1,0 +1,27 @@
+"""Ambient mesh context for modules that need explicit collectives
+(shard_map paths) deep inside a traced model function."""
+from __future__ import annotations
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+_CACHE_SPECS = None
+
+
+def set_cache_specs(specs) -> None:
+    """PartitionSpec pytree for the decode cache (see sharding.decode_shardings)."""
+    global _CACHE_SPECS
+    _CACHE_SPECS = specs
+
+
+def get_cache_specs():
+    return _CACHE_SPECS

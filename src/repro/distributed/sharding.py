@@ -1,0 +1,204 @@
+"""Logical-axis sharding rules -> mesh PartitionSpecs (GSPMD via jit).
+
+Model templates annotate every parameter dim with a logical axis name
+("embed", "ff", "heads", "kv", "vocab", "experts", "layers", None). This
+module translates those to `PartitionSpec`s for a given mesh:
+
+  TP  : ff / heads / kv / vocab  -> "model"
+  DP  : batch dims               -> ("pod", "data") / ("data",)
+  EP  : experts -> "model"; expert FFN inner dims additionally shard "ff"
+        over "data" (experts dominate MoE bytes — EP x FSDP-style layout)
+  ZeRO: optimizer moments additionally shard "embed" over "data"
+  SP  : long-context caches shard sequence over "data" when batch < data
+
+Spec construction is *shape-aware*: an axis mapping is dropped (replicated)
+when the dim size is not divisible by the mesh axis size (e.g. vocab 50280
+on 16-way TP, batch 1 decode), and each mesh axis is used at most once per
+spec (first logical dim wins).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model_zoo
+from repro.models.common import Leaf
+
+__all__ = [
+    "param_rules", "zero_rules", "batch_axes", "specs_for_template",
+    "param_shardings", "train_state_shardings", "batch_shardings",
+    "decode_shardings", "named",
+]
+
+
+def _has_pod(mesh: Mesh) -> bool:
+    return "pod" in mesh.axis_names
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if _has_pod(mesh) else ("data",)
+
+
+def param_rules(mesh: Mesh) -> dict:
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "ff": "model",
+        "experts": "model",
+        "embed": None,
+        "layers": None,
+        None: None,
+    }
+
+
+def zero_rules(mesh: Mesh) -> dict:
+    """ZeRO-1: moments also shard the replicated 'embed' axis over data."""
+    r = dict(param_rules(mesh))
+    r["embed"] = "data"
+    return r
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _spec_for_leaf(shape: tuple, axes: tuple, rules: dict, mesh: Mesh) -> P:
+    entries = []
+    used: set = set()
+    is_expert_leaf = "experts" in axes
+    ep_axis = rules.get("experts", "model")
+    ep_other = {"model": "data", "data": "model"}.get(ep_axis, None)
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax, None)
+        if is_expert_leaf and ax == "experts":
+            target = ep_axis
+        if is_expert_leaf and ax == "ff":
+            # expert-FFN inner dim takes the axis experts don't use
+            # (EP x sharded-FFN layout; no dim unsharded on 400B experts)
+            target = ep_other
+        if target is None:
+            entries.append(None)
+            continue
+        flat = target if isinstance(target, tuple) else (target,)
+        if any(t in used for t in flat) or dim % _axis_size(mesh, target) != 0:
+            entries.append(None)
+            continue
+        used.update(flat)
+        entries.append(target)
+    return P(*entries)
+
+
+def specs_for_template(template, rules: dict, mesh: Mesh):
+    return jax.tree.map(
+        lambda l: _spec_for_leaf(l.shape, l.axes, rules, mesh),
+        template,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _rules_for_cfg(cfg, rules: dict) -> dict:
+    r = dict(rules)
+    if getattr(cfg, "ep_axis", "model") != "model":
+        r["experts"] = cfg.ep_axis
+    return r
+
+
+def param_shardings(cfg, mesh: Mesh):
+    tmpl = model_zoo.template(cfg)
+    return named(mesh, specs_for_template(tmpl, _rules_for_cfg(cfg, param_rules(mesh)), mesh))
+
+
+def train_state_shardings(cfg, mesh: Mesh, tcfg) -> dict:
+    tmpl = model_zoo.template(cfg)
+    p_specs = specs_for_template(tmpl, _rules_for_cfg(cfg, param_rules(mesh)), mesh)
+    m_rules = zero_rules(mesh) if tcfg.opt.zero_sharding else param_rules(mesh)
+    m_specs = specs_for_template(tmpl, _rules_for_cfg(cfg, m_rules), mesh)
+    out = dict(
+        params=p_specs,
+        opt=dict(m=m_specs, v=jax.tree.map(lambda s: s, m_specs), step=P()),
+        router_state=P(),
+    )
+    if tcfg.grad_compression:
+        out["err"] = jax.tree.map(lambda s: s, m_specs)
+    return named(mesh, out)
+
+
+def _batch_dim_spec(mesh: Mesh, dim_size: int):
+    """Largest prefix of the DP axes that evenly divides the batch."""
+    ba = batch_axes(mesh)
+    if dim_size % _axis_size(mesh, ba) == 0:
+        return ba if len(ba) > 1 else ba[0]
+    for a in ba:  # try single axes
+        if dim_size % mesh.shape[a] == 0:
+            return a
+    return None
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard dim 0 (global batch) of every input leaf over the DP axes."""
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        b = _batch_dim_spec(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(b, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def decode_shardings(cfg, cache_tree, mesh: Mesh, batch: int):
+    """Cache shardings: batch over DP when divisible, else sequence over
+    'data' (context parallelism for batch=1 long-context decode); heads /
+    d_in dims over 'model' when divisible."""
+    b = _batch_dim_spec(mesh, batch)
+
+    def dim_ok(size, axis):
+        return axis is not None and size % _axis_size(mesh, axis) == 0
+
+    def kv_spec(leaf):  # (L, B, S, Hkv, HD)
+        # TP the cache over heads when they divide; otherwise over the cache
+        # length (flash-decode style partial-softmax layout) — replicating
+        # heads forces whole-cache all-gathers at the step boundary.
+        if dim_ok(leaf.shape[3], "model"):
+            h_ax, s_ax = "model", None
+        elif dim_ok(leaf.shape[2], "model"):
+            h_ax, s_ax = None, "model"
+        else:
+            h_ax, s_ax = None, None
+        if b is not None:
+            return P(None, b, s_ax, h_ax, None)
+        seq = "data" if dim_ok(leaf.shape[2], "data") else None
+        if seq is not None and s_ax is not None:
+            return P(None, None, (seq, s_ax), h_ax, None)
+        return P(None, None, seq or s_ax, h_ax, None)  # SP over cache length
+
+    def conv_spec(leaf):  # (L, B, K-1, C)
+        model = "model" if dim_ok(leaf.shape[3], "model") else None
+        return P(None, b, None, model)
+
+    def ssm_spec(leaf):  # (L, B, H, P, S)
+        model = "model" if dim_ok(leaf.shape[2], "model") else None
+        return P(None, b, model, None, None)
+
+    out = {}
+    for name, leaf in cache_tree.items():
+        if name in ("k", "v"):
+            out[name] = NamedSharding(mesh, kv_spec(leaf))
+        elif name == "conv":
+            out[name] = NamedSharding(mesh, conv_spec(leaf))
+        elif name == "ssm":
+            out[name] = NamedSharding(mesh, ssm_spec(leaf))
+        else:
+            raise KeyError(name)
+    return out

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Model code calls these through ``cfg.use_pallas``; on the CPU container they
+run in interpret mode (`REPRO_PALLAS_INTERPRET=1`, the default here), on TPU
+set it to 0 for compiled kernels. Layouts are adapted from model-native
+(B, S, H, D) to kernel-native (B, H, S, D).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_call
+from .flash_attention import flash_attention_call
+from .potus_price import potus_price_call
+from .ssd_scan import ssd_intra_chunk_call
+
+__all__ = ["flash_attention", "decode_attention", "ssd_intra_chunk", "potus_price"]
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_call(qt, kt, vt, causal=causal, interpret=_INTERPRET)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); pos: (B,) -> (B, Hq, D)."""
+    return decode_attention_call(q, k_cache, v_cache, pos, interpret=_INTERPRET)
+
+
+def ssd_intra_chunk(xc, dtc, dA_cum, Bc, Cc):
+    return ssd_intra_chunk_call(xc, dtc, dA_cum, Bc, Cc, interpret=_INTERPRET)
+
+
+def potus_price(U, q_in, q_out, inst_container, inst_comp, edge_mask, V, beta):
+    return potus_price_call(
+        U, q_in, q_out, inst_container, inst_comp, edge_mask, V, beta,
+        interpret=_INTERPRET,
+    )

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "flash_attention_reference",
+    "decode_attention_reference",
+    "ssd_intra_chunk_reference",
+    "potus_price_reference",
+]
+
+
+def flash_attention_reference(q, k, v, causal: bool = True):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). Returns (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32) / np.sqrt(D)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v)
+    return out.reshape(B, Hq, S, D)
+
+
+def decode_attention_reference(q, k_cache, v_cache, pos):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); pos: (B,) last valid index.
+
+    Attends to cache positions <= pos (the current token is already
+    written at pos). Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache).astype(jnp.float32) / np.sqrt(D)
+    S = k_cache.shape[1]
+    mask = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache)
+    return out.reshape(B, Hq, D)
+
+
+def ssd_intra_chunk_reference(xc, dtc, dA_cum, Bc, Cc):
+    """Diagonal (intra-chunk) SSD block + per-chunk input states.
+
+    xc: (b, nc, Q, H, P); dtc/dA_cum: (b, nc, Q, H); Bc/Cc: (b, nc, Q, S).
+    Returns y_diag (b, nc, Q, H, P), states (b, nc, H, P, S)."""
+    Q = xc.shape[2]
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bnqs,bnks->bnqk", Cc, Bc)
+    y_diag = jnp.einsum("bnqk,bnqkh,bnkh,bnkhp->bnqhp", cb, decay, dtc, xc)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)
+    states = jnp.einsum("bnks,bnkh,bnkhp->bnhps", Bc, decay_to_end * dtc, xc)
+    return y_diag, states
+
+
+def potus_price_reference(U, q_in, q_out, inst_container, inst_comp, edge_mask, V, beta):
+    """Eq. (16) price matrix; +inf on non-edges. All inputs dense arrays."""
+    u_pair = U[inst_container[:, None], inst_container[None, :]]
+    qout_pair = q_out[jnp.arange(q_out.shape[0])[:, None], inst_comp[None, :]]
+    l = V * u_pair + q_in[None, :] - beta * qout_pair
+    return jnp.where(edge_mask, l, jnp.inf)

@@ -1,0 +1,278 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production meshes and record memory / cost / collective metrics.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM or unsupported collective
+fails the cell. Results stream into ``results/dryrun.json`` (resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_5_32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod --force
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, SHAPES, cells_for, get_config
+from repro.data.specs import input_specs
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo
+from repro.roofline.constants import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import TrainConfig, init_train_state, make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+
+def _train_cfg(cfg, remat: str = "dots_no_batch", microbatches: int = 1) -> TrainConfig:
+    # dots_no_batch: keep matmul outputs except batched ones (attention score
+    # matrices would otherwise dominate the residual footprint)
+    return TrainConfig(opt=OptConfig(zero_sharding=True), remat=remat,
+                       microbatches=microbatches)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict | None = None,
+               remat: str = "dots_no_batch", microbatches: int = 1):
+    overrides = dict(overrides or {})
+    remat = overrides.pop("remat", remat)
+    microbatches = overrides.pop("microbatches", microbatches)
+    shard_grads = overrides.pop("shard_grads", False)
+    cfg = get_config(arch)
+    if overrides:
+        if "act_sharding" in overrides and isinstance(overrides["act_sharding"], list):
+            overrides["act_sharding"] = tuple(overrides["act_sharding"])
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.distributed.context import set_cache_specs, set_mesh
+
+    set_mesh(mesh)
+    set_cache_specs(None)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            tcfg = _train_cfg(cfg, remat=remat, microbatches=microbatches)
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+            )
+            state_sh = shd.train_state_shardings(cfg, mesh, tcfg)
+            batch_sh = shd.batch_shardings(specs, mesh)
+            grad_specs = None
+            if shard_grads:
+                from repro.models import model_zoo as _mz
+
+                grad_specs = shd.specs_for_template(
+                    _mz.template(cfg), shd.zero_rules(mesh), mesh
+                )
+            step = make_train_step(cfg, tcfg, grad_specs=grad_specs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shapes, specs)
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(lambda: model_zoo.init(jax.random.PRNGKey(0), cfg))
+            p_sh = shd.param_shardings(cfg, mesh)
+            batch_sh = shd.batch_shardings(specs, mesh)
+            cache_tree = model_zoo.cache_spec(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = shd.decode_shardings(cfg, cache_tree, mesh, shape.global_batch)
+
+            def prefill_fn(params, batch):
+                return model_zoo.prefill(params, cfg, batch, max_len=shape.seq_len)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(p_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            )
+            lowered = jitted.lower(params_shapes, specs)
+        else:  # decode
+            params_shapes = jax.eval_shape(lambda: model_zoo.init(jax.random.PRNGKey(0), cfg))
+            p_sh = shd.param_shardings(cfg, mesh)
+            cache_sh = shd.decode_shardings(cfg, specs["cache"], mesh, shape.global_batch)
+            from repro.distributed.context import set_cache_specs
+
+            set_cache_specs({k: v.spec for k, v in cache_sh.items()})
+            tok_sh = shd.batch_shardings(
+                {"token": specs["token"], "pos": specs["pos"]}, mesh
+            )
+
+            def serve_step(params, token, pos, cache):
+                return model_zoo.decode_step(params, cfg, token, pos, cache)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, tok_sh["token"], tok_sh["pos"], cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(3,),
+            )
+            lowered = jitted.lower(
+                params_shapes, specs["token"], specs["pos"], specs["cache"]
+            )
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    # loop-aware cost model: XLA's cost_analysis visits scan bodies once;
+    # analyze_hlo amplifies while bodies by trip count (incl. collectives).
+    hc = analyze_hlo(hlo)
+    coll = dict(total=hc.wire_bytes, by_op=hc.wire_by_op, count=hc.coll_count)
+
+    flops_dev = float(hc.flops)
+    bytes_dev = float(hc.bytes)
+    xla_flops_once = float(cost.get("flops", 0.0))
+    xla_bytes_once = float(cost.get("bytes accessed", 0.0))
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    record = dict(
+        arch=arch,
+        shape=shape_name,
+        mesh="multi_pod" if multi_pod else "single_pod",
+        n_devices=n_dev,
+        kind=shape.kind,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        xla_body_once=dict(flops=xla_flops_once, bytes=xla_bytes_once),
+        collective=coll,
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_bytes_per_device=mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+            + mem.output_size_in_bytes,
+        ),
+        roofline=dict(
+            compute_s=compute_s,
+            memory_s=memory_s,
+            collective_s=collective_s,
+            dominant=dominant,
+            roofline_frac=compute_s / max(compute_s, memory_s, collective_s, 1e-30),
+            model_flops=model_flops,
+            model_flops_per_device=model_flops / n_dev,
+            useful_flops_ratio=(model_flops / n_dev) / max(flops_dev, 1e-30),
+        ),
+        hlo_bytes=len(hlo),
+        overrides=overrides or {},
+    )
+    return record
+
+
+def load_results() -> dict:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(res: dict) -> None:
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    tmp = RESULTS.with_suffix(".tmp")
+    tmp.write_text(json.dumps(res, indent=1, sort_keys=True))
+    tmp.rename(RESULTS)
+
+
+def cell_key(arch, shape, mesh_name, tag="") -> str:
+    return f"{arch}|{shape}|{mesh_name}" + (f"|{tag}" if tag else "")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single_pod", "multi_pod"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--override", default="", help="cfg overrides k=v,k=v (perf iters)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override.split(";"):  # ';'-separated so JSON lists survive
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            try:
+                v = json.loads(v)
+            except json.JSONDecodeError:
+                pass
+            overrides[k] = v
+
+    results = load_results()
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    meshes = [args.mesh] if args.mesh else ["single_pod", "multi_pod"]
+    failures = []
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in cells_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_name in meshes:
+                key = cell_key(arch, shape.name, mesh_name, args.tag)
+                if key in results and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[run ] {key} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape.name, mesh_name == "multi_pod", overrides)
+                    rec["tag"] = args.tag
+                    results[key] = rec
+                    save_results(results)
+                    r = rec["roofline"]
+                    print(
+                        f"       ok: compile={rec['compile_s']:.1f}s "
+                        f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                        f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+                        f"frac={r['roofline_frac']:.2f} "
+                        f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB/dev",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((key, str(e)))
+                    print(f"       FAIL: {e}\n{traceback.format_exc()}", flush=True)
+
+    print(f"\n{len(results)} cells recorded, {len(failures)} failures")
+    for k, e in failures:
+        print(f"  FAIL {k}: {e[:200]}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

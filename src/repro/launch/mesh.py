@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Importing this module never touches jax device state; meshes are built only
+inside the factory functions. The dry-run process forces 512 host devices
+(see ``dryrun.py``); on real hardware the same factories consume the actual
+TPU topology.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return shape, axes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape, axes = make_mesh_shape(multi_pod=multi_pod)
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax"
+        )
+    dev_array = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    import jax
+
+    n = n_data * n_model
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(np.array(devices).reshape(n_data, n_model), ("data", "model"))

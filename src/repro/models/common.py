@@ -1,0 +1,279 @@
+"""Shared model building blocks (pure-JAX, TPU-target).
+
+Parameters live in nested dicts built from *templates*: a single source of
+truth maps every leaf to (shape, logical sharding axes, initializer). The
+logical axes ("embed", "ff", "heads", "kv", "vocab", "experts", "layers", …)
+are translated to mesh `PartitionSpec`s by `repro.distributed.sharding`.
+
+Attention has three execution paths:
+  * dense one-shot einsum (short sequences),
+  * double-chunked online-softmax scan (long prefill; flash-style in XLA),
+  * Pallas kernels (`repro.kernels`) when ``cfg.use_pallas`` (TPU runtime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Leaf", "stacked", "init_params", "param_axes", "count_params",
+    "rms_norm", "rope", "apply_rope", "mlp", "mlp_template",
+    "attention", "decode_attention", "attn_template",
+    "DTYPES",
+]
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+# ---------------------------------------------------------------------------
+# Parameter templates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # overrides 1/sqrt(fan_in)
+
+    def materialize(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "embed":
+            s = self.scale or 1.0
+            return (jax.random.normal(key, self.shape, jnp.float32) * s).astype(dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        s = self.scale or (1.0 / np.sqrt(fan_in))
+        return (jax.random.normal(key, self.shape, jnp.float32) * s).astype(dtype)
+
+
+def stacked(n: int, template: dict) -> dict:
+    """Add a leading layer axis to every leaf (scan-over-layers layout)."""
+    return jax.tree.map(
+        lambda l: Leaf((n,) + l.shape, ("layers",) + l.axes, l.init, l.scale),
+        template,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+def init_params(key, template: dict, dtype) -> dict:
+    leaves, treedef = jax.tree.flatten(template, is_leaf=lambda x: isinstance(x, Leaf))
+    keys = jax.random.split(key, len(leaves))
+    vals = [l.materialize(k, dtype) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_axes(template: dict) -> dict:
+    return jax.tree.map(
+        lambda l: l.axes, template, is_leaf=lambda x: isinstance(x, Leaf)
+    )
+
+
+def count_params(template: dict) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, Leaf))
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Normalization / rotary embedding
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(positions, head_dim: int, theta: float):
+    """(..., S) int positions -> cos/sin of shape (..., S, head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_template(d_model: int, d_ff: int, mlp_type: str) -> dict:
+    t = {"w_out": Leaf((d_ff, d_model), ("ff", "embed"))}
+    if mlp_type in ("swiglu", "geglu"):
+        t["w_gate"] = Leaf((d_model, d_ff), ("embed", "ff"))
+        t["w_up"] = Leaf((d_model, d_ff), ("embed", "ff"))
+    else:
+        t["w_in"] = Leaf((d_model, d_ff), ("embed", "ff"))
+    return t
+
+
+def mlp(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_in"])
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_template(cfg) -> dict:
+    D, HD = cfg.d_model, cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads * HD, cfg.n_kv_heads * HD
+    t = {
+        "wq": Leaf((D, Hq), ("embed", "heads")),
+        "wk": Leaf((D, Hkv), ("embed", "kv")),
+        "wv": Leaf((D, Hkv), ("embed", "kv")),
+        "wo": Leaf((Hq, D), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = Leaf((Hq,), ("heads",), init="zeros")
+        t["bk"] = Leaf((Hkv,), ("kv",), init="zeros")
+        t["bv"] = Leaf((Hkv,), ("kv",), init="zeros")
+    return t
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    HD = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, HD)
+    k = k.reshape(B, S, cfg.n_kv_heads, HD)
+    v = v.reshape(B, S, cfg.n_kv_heads, HD)
+    cos, sin = rope(positions, HD, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _dense_attention(q, k, v, causal: bool, q_offset=0):
+    """One-shot einsum attention with GQA grouping."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    Sk = k.shape[1]
+    q = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) / np.sqrt(D)
+    if causal:
+        mask = (jnp.arange(Sq)[:, None] + q_offset) >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def _chunked_attention(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
+    """Flash-style double-chunked online-softmax attention in plain XLA.
+
+    Memory per step is O(q_chunk * kv_chunk) instead of O(S^2); causal blocks
+    strictly above the diagonal contribute nothing (masked)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    nq, nk = S // q_chunk, S // kv_chunk
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    qs = q.reshape(B, nq, q_chunk, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / np.sqrt(D)
+
+    def per_q(qi, q_blk):  # q_blk: (B, Hkv, G, q_chunk, D)
+        def inner(carry, kv):
+            m, l, acc, ki = carry
+            k_blk, v_blk = kv  # (B, Hkv, kv_chunk, D)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l, acc, ki + 1), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(inner, (m0, l0, a0, 0), (ks, vs))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: per_q(args[0], args[1]), (jnp.arange(nq), qs))
+    # out: (nq, B, Hkv, G, q_chunk, D) -> (B, S, Hq, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+def attention(p, x, cfg, positions=None):
+    """Self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, positions)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=cfg.causal)
+    elif S <= cfg.dense_attn_max_seq:
+        out = _dense_attention(q, k, v, cfg.causal)
+    else:
+        qc = min(cfg.attn_chunk, S)
+        out = _chunked_attention(q, k, v, cfg.causal, qc, qc)
+    out = out.reshape(B, S, cfg.n_heads * cfg.resolved_head_dim)
+    return out @ p["wo"], (k, v)
+
+
+def decode_attention(p, x, cfg, k_cache, v_cache, pos):
+    """Single-token attention against a KV cache.
+
+    x: (B, 1, D); caches: (B, Smax, Hkv, HD); pos: (B,) write positions.
+    Returns (out (B,1,D), new_k_cache, new_v_cache).
+    """
+    B, _, _ = x.shape
+    HD = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, pos[:, None])
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        out = kops.decode_attention(q[:, 0], k_cache, v_cache, pos)
+    else:
+        Hq = cfg.n_heads
+        Hkv = cfg.n_kv_heads
+        G = Hq // Hkv
+        qh = q[:, 0].reshape(B, Hkv, G, HD)
+        s = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache).astype(jnp.float32) / np.sqrt(HD)
+        Smax = k_cache.shape[1]
+        mask = jnp.arange(Smax)[None, :] <= pos[:, None]  # (B, Smax)
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+        out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache).reshape(B, Hq * HD)
+    out = out.reshape(B, 1, -1)
+    return out @ p["wo"], k_cache, v_cache

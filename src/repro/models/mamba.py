@@ -1,0 +1,179 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of ``Q`` tokens;
+within a chunk the output is a masked (causal, decay-weighted) quadratic
+form — MXU-friendly matmuls; across chunks a linear recurrence carries the
+(H, P, S) state. The cross-chunk pass is a ``lax.scan``; the intra-chunk
+part also has a Pallas kernel (`repro.kernels.ssd_scan`).
+
+Single-token decode keeps a per-layer (conv window, SSM state) cache and
+costs O(H*P*S) per step — the sub-quadratic path that makes the
+``long_500k`` cell feasible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Leaf, rms_norm
+
+__all__ = ["mamba_template", "mamba_block", "mamba_decode_step", "mamba_cache_spec"]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    return d_in, nheads, cfg.ssm_headdim, cfg.ssm_state
+
+
+def mamba_template(cfg) -> dict:
+    D = cfg.d_model
+    d_in, H, P, S = _dims(cfg)
+    conv_ch = d_in + 2 * S
+    proj_out = 2 * d_in + 2 * S + H  # z, x, B, C, dt
+    return {
+        "norm": Leaf((D,), ("embed",), init="ones"),
+        "in_proj": Leaf((D, proj_out), ("embed", "ff")),
+        "conv_w": Leaf((cfg.ssm_conv, conv_ch), (None, "ff"), scale=0.5),
+        "conv_b": Leaf((conv_ch,), ("ff",), init="zeros"),
+        "A_log": Leaf((H,), ("heads",), init="ones"),
+        "D": Leaf((H,), ("heads",), init="ones"),
+        "dt_bias": Leaf((H,), ("heads",), init="zeros"),
+        "gate_norm": Leaf((d_in,), ("ff",), init="ones"),
+        "out_proj": Leaf((d_in, D), ("ff", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, H, P, S = _dims(cfg)
+    z, xc = jnp.split(zxbcdt, [d_in], axis=-1)
+    x_conv, dt = jnp.split(xc, [d_in + 2 * S], axis=-1)
+    return z, x_conv, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False):
+    """SSD forward. x: (b, T, H, P); dt: (b, T, H); A: (H,) negative;
+    B, C: (b, T, S). Returns y: (b, T, H, P).
+
+    Single B/C group shared across heads (ngroups=1, Mamba2 default)."""
+    b, T, H, P = x.shape
+    S = B.shape[-1]
+    T0 = T
+    if T % chunk:  # pad with dt=0 tokens (no state contribution), slice off y
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    nc = T // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, S)
+    Cc = C.reshape(b, nc, chunk, S)
+
+    dA = dtc * A  # (b, nc, Q, H) negative increments
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        y_diag, states = kops.ssd_intra_chunk(xc, dtc, dA_cum, Bc, Cc)
+    else:
+        # intra-chunk (diagonal block): decay(q, k) = exp(cum(q) - cum(k)) for q >= k
+        seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,q,k,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bnqs,bnks->bnqk", Cc, Bc)  # (b,nc,q,k)
+        y_diag = jnp.einsum(
+            "bnqk,bnqkh,bnkh,bnkhp->bnqhp", cb, decay, dtc, xc
+        )
+        # per-chunk input state: sum_k exp(cum(Q) - cum(k)) * dt_k * B_k x_k
+        decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,Q,H)
+        states = jnp.einsum("bnks,bnkh,bnkhp->bnhps", Bc, decay_to_end * dtc, xc)
+
+    # cross-chunk recurrence over nc chunks (f32 carry: decay/dt are f32)
+    states = states.astype(jnp.float32)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :]).astype(jnp.float32)  # (b, nc, H)
+
+    def scan_fn(carry, inp):
+        s_prev = carry  # (b, H, P, S)
+        s_in, g = inp  # (b,H,P,S), (b,H)
+        s_new = s_prev * g[:, :, None, None] + s_in
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, P, S), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (b, nc, H, P, S) state entering chunk
+
+    in_decay = jnp.exp(dA_cum)  # (b, nc, Q, H) decay from chunk start
+    y_inter = jnp.einsum("bnqs,bnqh,bnhps->bnqhp", Cc, in_decay, s_prevs)
+    y = (y_diag + y_inter).reshape(b, T, H, P)
+    return y[:, :T0]
+
+
+def mamba_block(p, x, cfg):
+    """Full Mamba2 block. x: (B, T, D) -> (B, T, D)."""
+    d_in, H, P, S = _dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, x_conv, dt = _split_proj(cfg, zxbcdt)
+    x_conv = jax.nn.silu(_causal_conv(x_conv, p["conv_w"], p["conv_b"]))
+    xs, B_ssm, C_ssm = jnp.split(x_conv, [d_in, d_in + S], axis=-1)
+    b, T, _ = xs.shape
+    xs = xs.reshape(b, T, H, P)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (b, T, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    y = ssd_chunked(xs, dt, A, B_ssm, C_ssm, cfg.ssm_chunk, use_pallas=cfg.use_pallas)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(b, T, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype)
+
+
+def mamba_cache_spec(cfg, batch: int):
+    """Decode cache per layer: (conv window, SSM state)."""
+    d_in, H, P, S = _dims(cfg)
+    conv_ch = d_in + 2 * S
+    return (
+        jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H, P, S), jnp.float32),
+    )
+
+
+def mamba_decode_step(p, x, cfg, conv_state, ssm_state):
+    """Single-token step. x: (B, 1, D); returns (y (B,1,D), new caches)."""
+    d_in, H, P, S = _dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = (h @ p["in_proj"])[:, 0]  # (B, proj)
+    z, x_conv, dt = (a[:, 0] if a.ndim == 3 else a for a in _split_proj(cfg, zxbcdt[:, None]))
+    # conv over the cached window + current token
+    win = jnp.concatenate([conv_state, x_conv[:, None, :]], axis=1)  # (B, K, C)
+    conv_out = jax.nn.silu((win * p["conv_w"][None]).sum(axis=1) + p["conv_b"])
+    new_conv_state = win[:, 1:]
+    xs, B_ssm, C_ssm = jnp.split(conv_out, [d_in, d_in + S], axis=-1)
+    xs = xs.reshape(-1, H, P)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    g = jnp.exp(dt * A)  # (B, H)
+    # state <- state * g + dt * B x
+    upd = jnp.einsum("bh,bhp,bs->bhps", dt, xs, B_ssm)
+    new_ssm = ssm_state * g[:, :, None, None] + upd
+    y = jnp.einsum("bhps,bs->bhp", new_ssm, C_ssm) + xs * p["D"][None, :, None]
+    y = y.reshape(-1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    y = (y @ p["out_proj"]).astype(x.dtype)
+    return y[:, None, :], new_conv_state, new_ssm

@@ -1,0 +1,520 @@
+"""Unified model API over the assigned architecture pool.
+
+Every architecture exposes:
+  template(cfg)                         -> parameter template (shapes + logical axes)
+  init(key, cfg)                        -> params
+  forward(params, cfg, batch, ...)      -> (logits, aux)        [train / encoder]
+  prefill(params, cfg, batch, max_len)  -> (logits, cache)      [serving]
+  decode_step(params, cfg, token, pos, cache) -> (logits, cache)
+
+Layer stacks run under ``lax.scan`` over stacked parameters (compile-time
+O(1) in depth) with a configurable remat policy. Hybrid (Zamba2-style)
+models unroll into groups of ``attn_every`` scanned Mamba blocks followed by
+a shared attention block, so each shared-block invocation gets a statically
+indexed KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    DTYPES,
+    Leaf,
+    attention,
+    attn_template,
+    decode_attention,
+    init_params,
+    mlp,
+    mlp_template,
+    param_axes,
+    rms_norm,
+    stacked,
+)
+from .mamba import (
+    mamba_block,
+    mamba_cache_spec,
+    mamba_decode_step,
+    mamba_template,
+)
+from .moe import init_router_state, moe_ffn, moe_template
+
+__all__ = [
+    "template", "init", "forward", "prefill", "decode_step",
+    "axes", "cache_spec", "REMAT_POLICIES",
+]
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _tf_block_template(cfg, use_moe: bool) -> dict:
+    t = {
+        "ln1": Leaf((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_template(cfg),
+        "ln2": Leaf((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if use_moe:
+        t["moe"] = moe_template(cfg)
+    else:
+        t["mlp"] = mlp_template(cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return t
+
+
+def _block_template(cfg) -> tuple[dict, int]:
+    """Returns (single scan-unit template, number of scan units)."""
+    if cfg.ssm:
+        return mamba_template(cfg), cfg.n_layers
+    if cfg.moe and cfg.moe_interleave > 1:
+        n_units = cfg.n_layers // cfg.moe_interleave
+        unit = {
+            f"sub{i}": _tf_block_template(cfg, use_moe=(i == cfg.moe_interleave - 1))
+            for i in range(cfg.moe_interleave)
+        }
+        return unit, n_units
+    return _tf_block_template(cfg, use_moe=cfg.moe), cfg.n_layers
+
+
+def template(cfg) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    t: dict = {}
+    if not cfg.is_encoder:
+        t["embed"] = Leaf((V, D), ("vocab", "embed"), init="embed", scale=0.02)
+    unit, n_units = _block_template(cfg)
+    t["blocks"] = stacked(n_units, unit)
+    if cfg.attn_every:  # shared attention blocks (hybrid)
+        shared = {
+            "ln1": Leaf((D,), ("embed",), init="ones"),
+            "attn": attn_template(cfg),
+            "ln2": Leaf((D,), ("embed",), init="ones"),
+            "mlp": mlp_template(D, cfg.d_ff, cfg.mlp_type),
+        }
+        t["shared_attn"] = stacked(cfg.n_shared_attn, shared)
+    t["final_norm"] = Leaf((D,), ("embed",), init="ones")
+    if cfg.is_encoder or not cfg.tie_embeddings:
+        t["lm_head"] = Leaf((D, V), ("embed", "vocab"))
+    return t
+
+
+def axes(cfg) -> dict:
+    return param_axes(template(cfg))
+
+
+def init(key, cfg) -> dict:
+    return init_params(key, template(cfg), DTYPES[cfg.param_dtype])
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+def _moe_dispatch(p_moe, h_in, cfg, router_state):
+    if cfg.moe_ep_shardmap:
+        from repro.distributed.context import get_mesh
+        from .moe_ep import moe_ffn_ep
+
+        mesh = get_mesh()
+        if mesh is not None:
+            return moe_ffn_ep(p_moe, h_in, cfg, mesh, router_state)
+    return moe_ffn(p_moe, h_in, cfg, router_state)
+
+
+def _tf_block(p, x, cfg, router_state, positions):
+    h, _ = attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+    x = x + h
+    h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h, aux = _moe_dispatch(p["moe"], h_in, cfg, router_state)
+        new_rs = aux["router_state"] if aux["router_state"] is not None else router_state
+        return x + h, new_rs, aux["aux_loss"]
+    return x + mlp(p["mlp"], h_in, cfg.mlp_type), router_state, jnp.float32(0)
+
+
+def _scan_unit(p_unit, x, cfg, router_state, positions):
+    if cfg.ssm:
+        return mamba_block(p_unit, x, cfg) + x, router_state, jnp.float32(0)
+    if cfg.moe and cfg.moe_interleave > 1:
+        aux_total = jnp.float32(0)
+        for i in range(cfg.moe_interleave):
+            x, router_state, aux = _tf_block(p_unit[f"sub{i}"], x, cfg, router_state, positions)
+            aux_total = aux_total + aux
+        return x, router_state, aux_total
+    return _tf_block(p_unit, x, cfg, router_state, positions)
+
+
+def _run_stack(p_blocks, x, cfg, router_state, positions, remat: str,
+               start: int | None = None, stop: int | None = None):
+    """Scan over (a slice of) the stacked blocks."""
+    if start is not None:
+        p_blocks = jax.tree.map(lambda a: a[start:stop], p_blocks)
+
+    def body(carry, p_unit):
+        x, rs = carry
+        if cfg.act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(
+                x, jax.sharding.PartitionSpec(*cfg.act_sharding)
+            )
+        x, rs, aux = _scan_unit(p_unit, x, cfg, rs, positions)
+        return (x, rs), aux
+
+    if remat != "none":
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat], prevent_cse=False)
+    (x, router_state), aux = jax.lax.scan(body, (x, router_state), p_blocks)
+    return x, router_state, aux.sum()
+
+
+def _shared_attn_block(p, x, cfg, positions):
+    h, kv = attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_type)
+    return x, kv
+
+
+def _hybrid_groups(cfg) -> list[tuple[int, int, bool]]:
+    """[(start, stop, attn_after)] segments of the Mamba stack."""
+    groups = []
+    s = 0
+    while s < cfg.n_layers:
+        e = min(s + cfg.attn_every, cfg.n_layers)
+        groups.append((s, e, e - s == cfg.attn_every))
+        s = e
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / encode)
+# ---------------------------------------------------------------------------
+
+def _embed_input(params, cfg, batch):
+    cdt = DTYPES[cfg.compute_dtype]
+    if cfg.is_encoder:
+        return batch["embeddings"].astype(cdt)
+    x = params["embed"][batch["tokens"]].astype(cdt)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cdt), x], axis=1)
+    return x
+
+
+def _unembed(params, cfg, x):
+    if cfg.is_encoder or not cfg.tie_embeddings:
+        w = params["lm_head"]
+    else:
+        w = params["embed"].T
+    return (x @ w).astype(DTYPES[cfg.compute_dtype])
+
+
+def forward(params, cfg, batch, router_state=None, remat: str = "none"):
+    """Full-sequence forward. Returns (logits (B, S, V) fp32, aux dict)."""
+    x = _embed_input(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if router_state is None:
+        router_state = init_router_state(cfg) if cfg.moe else jnp.zeros((1,), jnp.float32)
+
+    if cfg.attn_every:
+        aux_total = jnp.float32(0)
+        for gi, (s, e, attn_after) in enumerate(_hybrid_groups(cfg)):
+            x, router_state, aux = _run_stack(
+                params["blocks"], x, cfg, router_state, positions, remat, s, e
+            )
+            aux_total = aux_total + aux
+            if attn_after:
+                shared_idx = gi % cfg.n_shared_attn
+                p_sh = jax.tree.map(lambda a: a[shared_idx], params["shared_attn"])
+                x, _ = _shared_attn_block(p_sh, x, cfg, positions)
+        aux = aux_total
+    else:
+        x, router_state, aux = _run_stack(params["blocks"], x, cfg, router_state, positions, remat)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    return logits, dict(moe_aux_loss=aux, router_state=router_state)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct pytree of the decode cache."""
+    HD = cfg.resolved_head_dim
+    cdt = DTYPES[cfg.compute_dtype]
+    spec: dict = {}
+    unit, n_units = _block_template(cfg)
+    if cfg.ssm:
+        conv, ssm = mamba_cache_spec(cfg, batch)
+        spec["conv"] = jax.ShapeDtypeStruct((n_units,) + conv.shape, conv.dtype)
+        spec["ssm"] = jax.ShapeDtypeStruct((n_units,) + ssm.shape, ssm.dtype)
+        if cfg.attn_every:
+            n_inv = sum(1 for *_r, a in _hybrid_groups(cfg) if a)
+            kv = (n_inv, batch, max_len, cfg.n_kv_heads, HD)
+            spec["k"] = jax.ShapeDtypeStruct(kv, cdt)
+            spec["v"] = jax.ShapeDtypeStruct(kv, cdt)
+    else:
+        per_unit = cfg.moe_interleave if (cfg.moe and cfg.moe_interleave > 1) else 1
+        kv = (n_units * per_unit, batch, max_len, cfg.n_kv_heads, HD)
+        spec["k"] = jax.ShapeDtypeStruct(kv, cdt)
+        spec["v"] = jax.ShapeDtypeStruct(kv, cdt)
+    return spec
+
+
+def _init_cache(cfg, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_len))
+
+
+def prefill(params, cfg, batch, max_len: int, router_state=None):
+    """Process a prompt, build the decode cache. Returns (logits, cache)."""
+    x = _embed_input(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    cache = _init_cache(cfg, B, max_len)
+    if router_state is None:
+        router_state = init_router_state(cfg) if cfg.moe else jnp.zeros((1,), jnp.float32)
+
+    if cfg.ssm:
+        x, cache, _ = _ssm_prefill(params, cfg, x, cache, positions, router_state)
+    else:
+        x, cache = _attn_prefill(params, cfg, x, cache, positions, router_state)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x[:, -1:]), cache
+
+
+def _attn_prefill(params, cfg, x, cache, positions, router_state):
+    def body(carry, p_unit):
+        x, rs = carry
+        # run the unit but capture kv (re-derive: attention returns kv)
+        if cfg.moe and cfg.moe_interleave > 1:
+            kvs = []
+            for i in range(cfg.moe_interleave):
+                p = p_unit[f"sub{i}"]
+                h, kv = attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+                x = x + h
+                h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+                if "moe" in p:
+                    h, aux = _moe_dispatch(p["moe"], h_in, cfg, rs)
+                    rs = aux["router_state"] if aux["router_state"] is not None else rs
+                    x = x + h
+                else:
+                    x = x + mlp(p["mlp"], h_in, cfg.mlp_type)
+                kvs.append(kv)
+            k = jnp.stack([kv[0] for kv in kvs])
+            v = jnp.stack([kv[1] for kv in kvs])
+        else:
+            p = p_unit
+            h, kv = attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+            x = x + h
+            h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "moe" in p:
+                h, aux = _moe_dispatch(p["moe"], h_in, cfg, rs)
+                rs = aux["router_state"] if aux["router_state"] is not None else rs
+                x = x + h
+            else:
+                x = x + mlp(p["mlp"], h_in, cfg.mlp_type)
+            k, v = kv[0][None], kv[1][None]
+        return (x, rs), (k, v)
+
+    (x, _), (ks, vs) = jax.lax.scan(body, (x, router_state), params["blocks"])
+    # ks: (n_units, per_unit, B, S, Hkv, HD) -> (L, B, S, ...)
+    L = cache["k"].shape[0]
+    S = x.shape[1]
+    ks = ks.reshape((L,) + ks.shape[2:])
+    vs = vs.reshape((L,) + vs.shape[2:])
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0)
+    )
+    return x, cache
+
+
+def _ssm_prefill(params, cfg, x, cache, positions, router_state):
+    from .mamba import _causal_conv, _dims, _split_proj, ssd_chunked  # noqa
+
+    # run blocks, capturing final (conv, ssm) state per block
+    d_in, H, P, S_ssm = _dims(cfg)
+
+    def block_with_state(p, x):
+        h = rms_norm(x, p["norm"], cfg.norm_eps)
+        zxbcdt = h @ p["in_proj"]
+        z, x_conv, dt = _split_proj(cfg, zxbcdt)
+        conv_tail = x_conv[:, -(cfg.ssm_conv - 1):, :]
+        x_conv = jax.nn.silu(_causal_conv(x_conv, p["conv_w"], p["conv_b"]))
+        xs, B_ssm, C_ssm = jnp.split(x_conv, [d_in, d_in + S_ssm], axis=-1)
+        b, T, _ = xs.shape
+        xs = xs.reshape(b, T, H, P)
+        dt = jax.nn.softplus(dt + p["dt_bias"])
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, final_state = ssd_chunked_with_state(xs, dt, A, B_ssm, C_ssm, cfg.ssm_chunk)
+        y = y + xs * p["D"][None, None, :, None]
+        y = y.reshape(b, T, d_in)
+        y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+        return x + (y @ p["out_proj"]).astype(x.dtype), conv_tail.astype(jnp.float32), final_state
+
+    if cfg.attn_every:
+        convs, ssms = [], []
+        attn_idx = 0
+        for gi, (s, e, attn_after) in enumerate(_hybrid_groups(cfg)):
+            for li in range(s, e):
+                p_li = jax.tree.map(lambda a: a[li], params["blocks"])
+                x, conv_st, ssm_st = block_with_state(p_li, x)
+                convs.append(conv_st)
+                ssms.append(ssm_st)
+            if attn_after:
+                p_sh = jax.tree.map(lambda a: a[gi % cfg.n_shared_attn], params["shared_attn"])
+                x, (k, v) = _shared_attn_block(p_sh, x, cfg, positions)
+                cache["k"] = cache["k"].at[attn_idx, :, : k.shape[1]].set(k.astype(cache["k"].dtype))
+                cache["v"] = cache["v"].at[attn_idx, :, : v.shape[1]].set(v.astype(cache["v"].dtype))
+                attn_idx += 1
+        cache["conv"] = jnp.stack(convs)
+        cache["ssm"] = jnp.stack(ssms)
+    else:
+        def body(carry, p_unit):
+            x = carry
+            x, conv_st, ssm_st = block_with_state(p_unit, x)
+            return x, (conv_st, ssm_st)
+
+        x, (convs, ssms) = jax.lax.scan(body, x, params["blocks"])
+        cache["conv"], cache["ssm"] = convs, ssms
+    return x, cache, router_state
+
+
+def ssd_chunked_with_state(x, dt, A, B, C, chunk: int):
+    """ssd_chunked that also returns the final recurrent state."""
+    from .mamba import ssd_chunked  # reuse math; final state recomputed cheaply
+
+    b, T, H, P = x.shape
+    S = B.shape[-1]
+    y = ssd_chunked(x, dt, A, B, C, chunk)
+    # final state = sum_k exp(cumsum_from_k_to_T) dt_k B_k x_k — one pass
+    dA = dt * A  # (b, T, H)
+    dA_total = dA.sum(axis=1, keepdims=True)
+    decay_to_end = jnp.exp(dA_total - jnp.cumsum(dA, axis=1))  # (b, T, H)
+    final = jnp.einsum("bts,bth,bthp->bhps", B, decay_to_end * dt, x)
+    return y, final
+
+
+def _constrain_cache(cache):
+    """Pin the cache layout: the per-row scatter in decode_attention defeats
+    GSPMD batch-sharding propagation and triggers whole-cache all-gathers at
+    the step boundary without this."""
+    from repro.distributed.context import get_cache_specs
+
+    specs = get_cache_specs()
+    if specs is None:
+        return cache
+    return {
+        k: (jax.lax.with_sharding_constraint(v, specs[k]) if k in specs else v)
+        for k, v in cache.items()
+    }
+
+
+def decode_step(params, cfg, token, pos, cache, router_state=None):
+    """One serving step: token (B, 1) int32 (or embeddings for encoders is
+    invalid — encoders have no decode), pos (B,). Returns (logits, cache)."""
+    if cfg.is_encoder:
+        raise ValueError("encoder-only architectures have no decode step")
+    cache = _constrain_cache(cache)
+    cdt = DTYPES[cfg.compute_dtype]
+    x = params["embed"][token].astype(cdt)
+    if router_state is None:
+        router_state = init_router_state(cfg) if cfg.moe else jnp.zeros((1,), jnp.float32)
+
+    if cfg.ssm:
+        x, cache = _ssm_decode(params, cfg, x, pos, cache)
+    else:
+        def body(carry, inp):
+            x, rs = carry
+            p_unit, k_c, v_c = inp
+            if cfg.moe and cfg.moe_interleave > 1:
+                ks, vs = [], []
+                for i in range(cfg.moe_interleave):
+                    p = p_unit[f"sub{i}"]
+                    h, k_c_i, v_c_i = decode_attention(
+                        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, k_c[i], v_c[i], pos
+                    )
+                    x = x + h
+                    h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+                    if "moe" in p:
+                        h, aux = moe_ffn(p["moe"], h_in, cfg, rs)
+                        rs = aux["router_state"] if aux["router_state"] is not None else rs
+                        x = x + h
+                    else:
+                        x = x + mlp(p["mlp"], h_in, cfg.mlp_type)
+                    ks.append(k_c_i)
+                    vs.append(v_c_i)
+                return (x, rs), (jnp.stack(ks), jnp.stack(vs))
+            p = p_unit
+            h, k_c, v_c = decode_attention(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, k_c, v_c, pos
+            )
+            x = x + h
+            h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "moe" in p:
+                h, aux = _moe_dispatch(p["moe"], h_in, cfg, rs)
+                rs = aux["router_state"] if aux["router_state"] is not None else rs
+                x = x + h
+            else:
+                x = x + mlp(p["mlp"], h_in, cfg.mlp_type)
+            return (x, rs), (k_c, v_c)
+
+        L = cache["k"].shape[0]
+        per_unit = cfg.moe_interleave if (cfg.moe and cfg.moe_interleave > 1) else 1
+        n_units = L // per_unit
+        k_in = cache["k"].reshape((n_units, per_unit) + cache["k"].shape[1:])
+        v_in = cache["v"].reshape((n_units, per_unit) + cache["v"].shape[1:])
+        if per_unit == 1:
+            k_in, v_in = k_in[:, 0], v_in[:, 0]
+        (x, _), (ks, vs) = jax.lax.scan(body, (x, router_state), (params["blocks"], k_in, v_in))
+        cache["k"] = ks.reshape(cache["k"].shape)
+        cache["v"] = vs.reshape(cache["v"].shape)
+
+    cache = _constrain_cache(cache)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), cache
+
+
+def _ssm_decode(params, cfg, x, pos, cache):
+    if cfg.attn_every:
+        attn_idx = 0
+        for gi, (s, e, attn_after) in enumerate(_hybrid_groups(cfg)):
+            for li in range(s, e):
+                p_li = jax.tree.map(lambda a: a[li], params["blocks"])
+                y, conv_st, ssm_st = mamba_decode_step(
+                    p_li, x, cfg, cache["conv"][li], cache["ssm"][li]
+                )
+                x = x + y
+                cache["conv"] = cache["conv"].at[li].set(conv_st)
+                cache["ssm"] = cache["ssm"].at[li].set(ssm_st)
+            if attn_after:
+                p_sh = jax.tree.map(lambda a: a[gi % cfg.n_shared_attn], params["shared_attn"])
+                h, k_c, v_c = decode_attention(
+                    p_sh["attn"], rms_norm(x, p_sh["ln1"], cfg.norm_eps), cfg,
+                    cache["k"][attn_idx], cache["v"][attn_idx], pos,
+                )
+                x = x + h
+                x = x + mlp(p_sh["mlp"], rms_norm(x, p_sh["ln2"], cfg.norm_eps), cfg.mlp_type)
+                cache["k"] = cache["k"].at[attn_idx].set(k_c)
+                cache["v"] = cache["v"].at[attn_idx].set(v_c)
+                attn_idx += 1
+    else:
+        def body(x, inp):
+            p_unit, conv_st, ssm_st = inp
+            y, conv_st, ssm_st = mamba_decode_step(p_unit, x, cfg, conv_st, ssm_st)
+            return x + y, (conv_st, ssm_st)
+
+        x, (convs, ssms) = jax.lax.scan(body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        cache["conv"], cache["ssm"] = convs, ssms
+    return x, cache

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard/Switch-style)
+and an optional beyond-paper **POTUS router**.
+
+Dispatch is scatter/gather based (no giant one-hot dispatch tensors):
+  1. router logits -> top-k experts + renormalized weights per token;
+  2. position-in-expert via a cumulative count (capacity ``cap`` static);
+  3. tokens scattered into an (E, cap, D) buffer, expert FFNs run as batched
+     einsums (expert axis = "experts" logical axis -> TP/EP sharding);
+  4. results gathered back and combined with router weights.
+Over-capacity tokens are dropped (standard Switch semantics); the residual
+stream carries them unchanged.
+
+POTUS router (DESIGN.md §3): expert load balancing as tuple scheduling. Each
+expert e keeps a virtual queue Q_e updated with the drift rule
+``Q_e <- [Q_e + load_e - N*k/E]+`` (arrivals - service, eq. (8)); selection
+uses prices ``logits - beta * Q`` (eq. (16) with U=0 inside a layer). This is
+auxiliary-loss-free load balancing — the same mathematics DeepSeek-V3 uses
+for bias-based balancing — derived here from the paper's Lyapunov scheme.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Leaf, mlp, mlp_template
+
+__all__ = ["moe_template", "moe_ffn", "init_router_state", "moe_capacity"]
+
+
+def moe_template(cfg) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    t = {
+        "router": Leaf((D, E), ("embed", "experts"), scale=0.02),
+        "w_gate": Leaf((E, D, F), ("experts", "embed", "ff")),
+        "w_up": Leaf((E, D, F), ("experts", "embed", "ff")),
+        "w_down": Leaf((E, F, D), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        t["shared"] = mlp_template(D, F * cfg.n_shared_experts, cfg.mlp_type)
+    return t
+
+
+def init_router_state(cfg) -> jax.Array:
+    """Virtual queue backlog per expert (POTUS router); zeros = balanced."""
+    return jnp.zeros((cfg.n_experts,), jnp.float32)
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    return int(np.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+
+
+def moe_ffn(p, x, cfg, router_state=None):
+    """x: (B, S, D). Returns (y, aux) where aux carries load metrics and the
+    updated POTUS virtual queues."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (N, E)
+    if cfg.router_replicate_hint:
+        # tokens sharded over data, expert axis replicated: top_k and the
+        # (N, k) gathers stay local instead of crossing the TP shards
+        logits = jax.lax.with_sharding_constraint(
+            logits, jax.sharding.PartitionSpec("data", None)
+        )
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    sel_scores = logits
+    if cfg.router == "potus" and router_state is not None:
+        # price = affinity - beta * virtual backlog  (eq. 16, U=0)
+        scale = jnp.maximum(jnp.abs(logits).mean(), 1e-6)
+        backlog = router_state / jnp.maximum(router_state.mean() + 1.0, 1.0)
+        sel_scores = logits - cfg.potus_router_beta * scale * backlog[None, :]
+
+    top_w, top_i = jax.lax.top_k(sel_scores, k)  # (N, k)
+    # combine weights always come from the raw affinities (unbiased output)
+    gather_p = jnp.take_along_axis(probs, top_i, axis=-1)
+    top_w = gather_p / jnp.maximum(gather_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = moe_capacity(cfg, N)
+    flat_e = top_i.reshape(-1)  # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (N*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (N*k, E)
+    pos = pos_in_e.sum(axis=-1)  # (N*k,)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, E * cap)  # E*cap = trash slot
+
+    token_idx = jnp.repeat(jnp.arange(N), k)
+    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].set(xf[token_idx])
+    expert_in = buf[:-1].reshape(E, cap, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", expert_in, p["w_up"]
+    )
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, cap, D)
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(E * cap, D), jnp.zeros((1, D), x.dtype)], axis=0
+    )
+    y_tok = out_flat[slot]  # (N*k, D); dropped tokens -> 0
+    y = (y_tok.reshape(N, k, D) * top_w[..., None].astype(x.dtype)).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], xf, cfg.mlp_type)
+
+    # --- balance metrics + POTUS virtual-queue update -----------------------
+    load = onehot.sum(axis=0).astype(jnp.float32)  # (E,) tokens routed (pre-drop)
+    frac = load / jnp.maximum(load.sum(), 1.0)
+    imp = probs.mean(axis=0)
+    aux_loss = E * jnp.sum(frac * imp)  # Switch load-balance loss (metric)
+    new_state = None
+    if router_state is not None:
+        service = N * k / E
+        new_state = jnp.maximum(router_state + load - service, 0.0)  # eq. (8)
+    dropped = 1.0 - keep.mean()
+    aux = dict(aux_loss=aux_loss, dropped_frac=dropped, load=load, router_state=new_state)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,185 @@
+"""Expert-parallel MoE via ``shard_map`` + explicit ``all_to_all``.
+
+The pjit/GSPMD lowering of the scatter/gather dispatch re-materializes the
+token<->expert resharding as masked all-reduces (measured: ~0.9 TB/device/
+step wire on llama4-maverick train_4k). This module replaces the dispatch
+with the communication pattern a production MoE actually uses:
+
+  layout   tokens  : sharded over the DP axes (replicated over "model")
+           experts : sharded over "data"  (EP groups = DP ranks, à la
+                     DeepSpeed-MoE; replicated across pods)
+           expert FFN inner dim : sharded over "model" (TP inside expert)
+
+  per layer wire = 2 x all_to_all(token buffers over "data")
+                 + 1 x psum(FFN contraction over "model")
+
+Routing decisions (top-k, capacity, POTUS virtual-queue prices) are computed
+locally per DP rank — the paper's "per-container stream manager" locality
+(Remark 1-2) realized on a TPU mesh: each EP group schedules its own tuples.
+
+Inside the shard_map every array is the per-device block; the function is
+fully differentiable (all_to_all/scatter/gather are linear).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from .moe import mlp, moe_capacity
+
+__all__ = ["moe_ffn_ep"]
+
+
+def _local_moe(xf, router_w, w_gate, w_up, w_down, shared, router_state, cfg,
+               data_axis, model_axis, ep, mp):
+    """Per-device body. xf: (N_loc, D); w_*: (E_loc, D, F_loc)."""
+    N_loc, D = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // ep
+
+    logits = xf.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (N_loc, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    sel = logits
+    if cfg.router == "potus" and router_state is not None:
+        scale = jnp.maximum(jnp.abs(logits).mean(), 1e-6)
+        backlog = router_state / jnp.maximum(router_state.mean() + 1.0, 1.0)
+        sel = logits - cfg.potus_router_beta * scale * backlog[None, :]
+
+    top_w, top_i = jax.lax.top_k(sel, k)  # (N_loc, k)
+    gp = jnp.take_along_axis(probs, top_i, axis=-1)
+    top_w = gp / jnp.maximum(gp.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1)  # (N_loc*k,) global expert ids
+    dest = flat_e // E_loc  # EP rank owning the expert
+    e_loc = flat_e % E_loc
+    token_idx = jnp.repeat(jnp.arange(N_loc), k)
+
+    # ---- send-side capacity & slots (per-destination fixed buffers) -------
+    cap_send = max(int(np.ceil(N_loc * k * cfg.capacity_factor / ep)), 1)
+    oh_dest = jax.nn.one_hot(dest, ep, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh_dest, axis=0) - 1)[jnp.arange(dest.shape[0]), dest]
+    keep = pos < cap_send
+    slot = jnp.where(keep, dest * cap_send + pos, ep * cap_send)  # last = trash
+
+    send_tok = jnp.zeros((ep * cap_send + 1, D), xf.dtype).at[slot].set(xf[token_idx])
+    send_eloc = jnp.full((ep * cap_send + 1,), -1, jnp.int32).at[slot].set(e_loc.astype(jnp.int32))
+
+    # ---- all_to_all over the EP (data) axis --------------------------------
+    a2a = partial(jax.lax.all_to_all, axis_name=data_axis, split_axis=0,
+                  concat_axis=0, tiled=False)
+    rec_tok = a2a(send_tok[:-1].reshape(ep, cap_send, D))  # (ep, cap_send, D)
+    rec_eloc = a2a(send_eloc[:-1].reshape(ep, cap_send, 1))[..., 0]  # (ep, cap_send)
+
+    # ---- local expert buffers ----------------------------------------------
+    R = ep * cap_send
+    rtok = rec_tok.reshape(R, D)
+    reloc = rec_eloc.reshape(R)
+    valid = reloc >= 0
+    cap_loc = moe_capacity(cfg, N_loc * ep)  # global per-expert capacity
+    oh_e = jax.nn.one_hot(jnp.where(valid, reloc, E_loc), E_loc + 1, dtype=jnp.int32)
+    pos2 = (jnp.cumsum(oh_e[:, :E_loc], axis=0) - 1)[jnp.arange(R), jnp.clip(reloc, 0, E_loc - 1)]
+    keep2 = valid & (pos2 < cap_loc)
+    slot2 = jnp.where(keep2, reloc * cap_loc + pos2, E_loc * cap_loc)
+
+    buf = jnp.zeros((E_loc * cap_loc + 1, D), xf.dtype).at[slot2].set(rtok)
+    expert_in = buf[:-1].reshape(E_loc, cap_loc, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", expert_in, w_up
+    )
+    part = jnp.einsum("ecf,efd->ecd", h, w_down)  # partial over F_loc
+    y_exp = jax.lax.psum(part, model_axis)  # (E_loc, cap_loc, D)
+
+    out_flat = jnp.concatenate(
+        [y_exp.reshape(E_loc * cap_loc, D), jnp.zeros((1, D), xf.dtype)], axis=0
+    )
+    back = out_flat[slot2].reshape(ep, cap_send, D)
+    ret = a2a(back)  # (ep, cap_send, D) results for *our* tokens
+    ret_flat = jnp.concatenate([ret.reshape(R, D), jnp.zeros((1, D), xf.dtype)], axis=0)
+    y_tok = ret_flat[slot]  # (N_loc*k, D); dropped -> 0
+    y = (y_tok.reshape(N_loc, k, D) * top_w[..., None].astype(xf.dtype)).sum(axis=1)
+
+    if shared is not None:
+        # shared expert runs TP over the model axis: F is sharded, so the
+        # down-projection is a partial sum -> psum
+        if cfg.mlp_type == "swiglu":
+            hs = jax.nn.silu(xf @ shared["w_gate"]) * (xf @ shared["w_up"])
+        elif cfg.mlp_type == "geglu":
+            hs = jax.nn.gelu(xf @ shared["w_gate"]) * (xf @ shared["w_up"])
+        else:
+            hs = jax.nn.gelu(xf @ shared["w_in"])
+        y = y + jax.lax.psum(hs @ shared["w_out"], model_axis)
+
+    # ---- aux metrics (global via psum over the EP axis) --------------------
+    load = jax.lax.psum(
+        jax.nn.one_hot(flat_e, E, dtype=jnp.float32).sum(axis=0), data_axis
+    )
+    frac = load / jnp.maximum(load.sum(), 1.0)
+    imp = jax.lax.pmean(probs.mean(axis=0), data_axis)
+    aux_loss = E * jnp.sum(frac * imp)
+    new_state = None
+    if router_state is not None:
+        service = load.sum() / E
+        new_state = jnp.maximum(router_state + load - service, 0.0)
+    dropped = 1.0 - jax.lax.pmean(keep.mean(), data_axis)
+    return y, aux_loss, dropped, load, new_state
+
+
+def moe_ffn_ep(p, x, cfg, mesh, router_state=None):
+    """Drop-in for ``moe_ffn`` under an active mesh with a 'data' axis.
+
+    x: (B, S, D) global. Requires E % data == 0 and d_ff % model == 0."""
+    B, S, D = x.shape
+    N = B * S
+    data_axis, model_axis = "data", "model"
+    ep = mesh.shape[data_axis]
+    mp = mesh.shape[model_axis]
+    pod_axes = tuple(a for a in mesh.axis_names if a == "pod")
+    token_spec = P((*pod_axes, data_axis), None)
+
+    xf = x.reshape(N, D)
+    had_router_state = router_state is not None
+    if router_state is None:
+        router_state = jnp.zeros((cfg.n_experts,), jnp.float32)
+
+    has_shared = cfg.n_shared_experts > 0 and "shared" in p
+    shared = p["shared"] if has_shared else {"pad": jnp.zeros((1, mp), x.dtype)}
+    sh_specs = {
+        name: (P(None, model_axis) if name in ("w_gate", "w_up", "w_in", "pad")
+               else P(model_axis, None))
+        for name in shared
+    }
+
+    def body(xf, router_w, w_gate, w_up, w_down, shared_p, rs):
+        y, aux_loss, dropped, load, new_rs = _local_moe(
+            xf, router_w, w_gate, w_up, w_down, shared_p if has_shared else None,
+            rs, cfg, data_axis, model_axis, ep, mp,
+        )
+        if new_rs is None:
+            new_rs = rs
+        return y, aux_loss, dropped, load, new_rs
+
+    in_specs = (
+        token_spec,  # tokens
+        P(None, None),  # router weights replicated
+        P(data_axis, None, model_axis),  # w_gate (E, D, F)
+        P(data_axis, None, model_axis),  # w_up
+        P(data_axis, model_axis, None),  # w_down (E, F, D)
+        sh_specs,
+        P(None),  # router_state
+    )
+    out_specs = (token_spec, P(), P(), P(), P())
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+    y, aux_loss, dropped, load, new_rs = fn(
+        xf, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared, router_state
+    )
+    aux = dict(aux_loss=aux_loss, dropped_frac=dropped, load=load,
+               router_state=new_rs if had_router_state else None)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (roofline targets, per brief)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+CHIPS_PER_POD = 256
+HBM_BYTES = 16 * 1024**3  # 16 GiB per chip

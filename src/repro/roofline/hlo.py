@@ -1,0 +1,100 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we regex the compiled
+module: every ``all-reduce | all-gather | reduce-scatter | all-to-all |
+collective-permute`` op contributes wire bytes estimated from its *result*
+shape and replica-group size ``g`` (ring algorithms):
+
+  all-reduce        2 * S * (g-1)/g          (reduce-scatter + all-gather)
+  all-gather        S_result * (g-1)/g
+  reduce-scatter    S_result * (g-1)         (operand = result * g)
+  all-to-all        S * (g-1)/g
+  collective-permute S
+
+Shapes are per-device (SPMD module), so the totals are per-device wire bytes
+— exactly what the roofline collective term needs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group("gs")), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {'total': wire bytes/device, 'by_op': {op: bytes}, 'count': n,
+    'result_bytes': raw result-shape bytes}."""
+    by_op: dict = defaultdict(float)
+    counts: dict = defaultdict(int)
+    raw = 0.0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # async pairs: count the -start, skip the -done
+        if f"{op}-done(" in line:
+            continue
+        size = _shape_bytes(m.group("shape"))
+        g = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)
+        elif op == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = float(size)
+        by_op[op] += wire
+        counts[op] += 1
+        raw += size
+    return dict(
+        total=float(sum(by_op.values())),
+        by_op={k: float(v) for k, v in by_op.items()},
+        count={k: int(v) for k, v in counts.items()},
+        result_bytes=float(raw),
+    )

@@ -1,0 +1,329 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` visits every computation **once** — a
+``lax.scan`` over 64 layers reports one layer's FLOPs. This module parses the
+compiled HLO text into computations, recovers while-loop trip counts from
+their condition computations (jax scans count 0..N with a `compare LT N`
+root), and folds costs bottom-up with loop amplification:
+
+  flops  : dot (2 * prod(result) * contracted), conv approximated likewise,
+           reduce (prod(operand)), standalone elementwise (prod(result)),
+           fusions recurse into their called computation
+  bytes  : per op, operands + result at the call site (i.e. post-fusion HBM
+           traffic); dynamic-update-slice counts 2x update (in-place);
+           structural ops (tuple/gte/parameter/bitcast/reshape) are free
+  wire   : collective wire bytes per device (ring formulas, see hlo.py),
+           amplified through loops — an all-reduce inside the layer scan
+           counts n_layers times
+
+Everything is per-device (the module is the SPMD program for one device).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\((?P<params>.*)\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\([^()]*\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>[^)]*)\)(?P<attrs>.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CONST_RE = re.compile(r"constant\((\-?\d+)\)")
+
+STRUCTURAL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "opt-barrier", "optimization-barrier",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems, nbytes = 0, 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group("dims").split(","):
+            if d.strip():
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_op: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+
+    def add(self, other: "HloCost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.wire_bytes += other.wire_bytes * times
+        for k, v in other.wire_by_op.items():
+            self.wire_by_op[k] = self.wire_by_op.get(k, 0.0) + v * times
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v * times
+
+
+def _parse_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        hdr = _COMP_HDR.match(line) if not line.startswith(" ") else None
+        if hdr and "{" in line:
+            cur = []
+            comps[hdr.group("name")] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ops = [o.strip().lstrip("%") for o in m.group("operands").split(",") if o.strip()]
+            # strip inline operand shapes: "f32[2,3] %name" -> "name"
+            ops = [o.split()[-1].lstrip("%") for o in ops]
+            cur.append(
+                Instr(m.group("name"), m.group("shape"), m.group("op"), ops, m.group("attrs"), line)
+            )
+    return comps
+
+
+def _called(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+_KNOWN_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def _trip_count(while_attrs: str, cond_instrs: list[Instr]) -> int:
+    """Prefer the compiler's known_trip_count backend config; fall back to
+    the largest integer constant in the condition computation (jax scans
+    compare a 0-based counter against the length)."""
+    m = _KNOWN_TRIP_RE.search(while_attrs)
+    if m:
+        return max(int(m.group(1)), 1)
+    consts = []
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            cm = _CONST_RE.search(ins.line)
+            if cm:
+                consts.append(int(cm.group(1)))
+    return max([c for c in consts if c > 0] + [1])
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.shape)
+    lhs_shape = shapes.get(ins.operands[0], "") if ins.operands else ""
+    dims = [int(d) for d in _SHAPE_RE.search(lhs_shape).group("dims").split(",") if d.strip()] \
+        if lhs_shape and _SHAPE_RE.search(lhs_shape) else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    contracted = 1
+    if m and dims:
+        for d in m.group(1).split(","):
+            if d.strip() and int(d) < len(dims):
+                contracted *= dims[int(d)]
+    return 2.0 * res_elems * max(contracted, 1)
+
+
+def _wire(ins: Instr, size_bytes: int) -> tuple[str, float]:
+    op = ins.op.replace("-start", "")
+    m = _GROUPS_RE.search(ins.attrs)
+    if m:
+        g = max(int(m.group(2)), 1)
+    else:
+        m2 = _GROUPS_LIST_RE.search(ins.attrs)
+        g = max(len(m2.group(1).split(",")), 1) if m2 else 1
+    if op == "all-reduce":
+        w = 2.0 * size_bytes * (g - 1) / g
+    elif op == "all-gather":
+        w = size_bytes * (g - 1) / g
+    elif op == "reduce-scatter":
+        w = size_bytes * (g - 1)
+    elif op == "all-to-all":
+        w = size_bytes * (g - 1) / g
+    else:  # collective-permute
+        w = float(size_bytes)
+    return op, w
+
+
+def _analyze(comp: str, comps: dict[str, list[Instr]], memo: dict[str, HloCost]) -> HloCost:
+    if comp in memo:
+        return memo[comp]
+    memo[comp] = HloCost()  # cycle guard
+    instrs = comps.get(comp, [])
+    shapes = {i.name: i.shape for i in instrs}
+    total = HloCost()
+    for ins in instrs:
+        op = ins.op
+        if op in STRUCTURAL:
+            continue
+        res_elems, res_bytes = _shape_elems_bytes(ins.shape)
+        opnd_bytes = sum(_shape_elems_bytes(shapes.get(o, ""))[1] for o in ins.operands)
+
+        if op == "while":
+            body = _called(ins.attrs, "body")
+            cond = _called(ins.attrs, "condition")
+            trips = _trip_count(ins.attrs, comps.get(cond, []))
+            if body:
+                total.add(_analyze(body, comps, memo), trips)
+            if cond:
+                total.add(_analyze(cond, comps, memo), trips)
+            continue
+        if op == "conditional":
+            branches = re.findall(r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*", ins.attrs)
+            names = re.findall(r"=%?([\w.\-]+)", " ".join(branches))
+            if names:
+                costs = [_analyze(n, comps, memo) for n in names]
+                total.add(max(costs, key=lambda c: c.flops + c.bytes))
+            continue
+        if op in ("call", "async-start"):
+            callee = _called(ins.attrs, "to_apply") or _called(ins.attrs, "calls")
+            if callee:
+                total.add(_analyze(callee, comps, memo))
+            continue
+        if op in COLLECTIVES:
+            kind, w = _wire(ins, max(res_bytes, opnd_bytes))
+            total.wire_bytes += w
+            total.wire_by_op[kind] = total.wire_by_op.get(kind, 0.0) + w
+            total.coll_count[kind] = total.coll_count.get(kind, 0) + 1
+            total.bytes += res_bytes + opnd_bytes
+            continue
+        if op.endswith("-done") or op.endswith("-update"):
+            continue
+
+        if op == "fusion":
+            callee = _called(ins.attrs, "calls")
+            if callee:
+                inner = _analyze(callee, comps, memo)
+                total.flops += inner.flops
+                total.wire_bytes += inner.wire_bytes
+            total.bytes += res_bytes + opnd_bytes
+            continue
+        if op == "dot":
+            total.flops += _dot_flops(ins, shapes)
+            total.bytes += res_bytes + opnd_bytes
+            continue
+        if op == "convolution":
+            # approximate: 2 * result_elems * (kernel elems / output channels)
+            total.flops += 2.0 * res_elems
+            total.bytes += res_bytes + opnd_bytes
+            continue
+        if op == "reduce" or op == "reduce-window":
+            total.flops += sum(_shape_elems_bytes(shapes.get(o, ""))[0] for o in ins.operands)
+            total.bytes += res_bytes + opnd_bytes
+            continue
+        if op == "dynamic-update-slice":
+            upd = _shape_elems_bytes(shapes.get(ins.operands[1], ""))[1] if len(ins.operands) > 1 else res_bytes
+            total.bytes += 2.0 * upd
+            continue
+        # generic op (standalone elementwise, copy, gather, scatter, ...)
+        total.flops += res_elems
+        total.bytes += res_bytes + opnd_bytes
+    memo[comp] = total
+    return total
+
+
+def _find_entry(text: str, comps: dict) -> str:
+    for raw in text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_HDR.match(raw)
+            if m:
+                return m.group("name")
+    return max(comps, key=lambda c: len(comps[c])) if comps else ""
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    memo: dict[str, HloCost] = {}
+    return _analyze(_find_entry(text, comps), comps, memo)
+
+
+def top_contributors(text: str, n: int = 20, metric: str = "bytes") -> list[tuple[str, float]]:
+    """Amplified per-instruction contributions, largest first — the
+    'profile' used by the §Perf hillclimbing loop (no real-TPU timings
+    exist; the lowered IR is the profile, per the brief)."""
+    comps = _parse_computations(text)
+    entry = _find_entry(text, comps)
+    contrib: dict[str, float] = {}
+
+    def walk(comp: str, mult: float):
+        instrs = comps.get(comp, [])
+        shapes = {i.name: i.shape for i in instrs}
+        for ins in instrs:
+            op = ins.op
+            if op in STRUCTURAL:
+                continue
+            res_elems, res_bytes = _shape_elems_bytes(ins.shape)
+            opnd_bytes = sum(_shape_elems_bytes(shapes.get(o, ""))[1] for o in ins.operands)
+            if op == "while":
+                body = _called(ins.attrs, "body")
+                cond = _called(ins.attrs, "condition")
+                trips = _trip_count(ins.attrs, comps.get(cond, []))
+                if body:
+                    walk(body, mult * trips)
+                continue
+            if op in ("call",):
+                callee = _called(ins.attrs, "to_apply") or _called(ins.attrs, "calls")
+                if callee:
+                    walk(callee, mult)
+                continue
+            if op.endswith("-done"):
+                continue
+            meta = re.search(r'op_name="([^"]+)"', ins.attrs)
+            label = f"{op}:{meta.group(1)[:90]}" if meta else f"{op}:{ins.name}"
+            if metric == "bytes":
+                val = (2.0 * opnd_bytes if op == "dynamic-update-slice" else res_bytes + opnd_bytes)
+            elif metric == "flops":
+                if op == "dot":
+                    val = _dot_flops(ins, shapes)
+                elif op == "fusion":
+                    callee = _called(ins.attrs, "calls")
+                    val = _analyze(callee, comps, {}).flops if callee else 0.0
+                else:
+                    val = float(res_elems)
+            else:  # wire
+                if op.replace("-start", "") not in {c.replace("-start", "") for c in COLLECTIVES}:
+                    continue
+                _, val = _wire(ins, max(res_bytes, opnd_bytes))
+            contrib[label] = contrib.get(label, 0.0) + val * mult
+
+    walk(entry, 1.0)
+    return sorted(contrib.items(), key=lambda kv: -kv[1])[:n]

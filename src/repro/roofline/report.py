@@ -1,0 +1,95 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from
+``results/dryrun.json``.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.report [--mesh single_pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+ARCH_ORDER = [
+    "qwen2_5_32b", "gemma_7b", "stablelm_3b", "deepseek_7b",
+    "llama4_maverick_400b", "granite_moe_1b", "zamba2_1_2b",
+    "internvl2_1b", "hubert_xlarge", "mamba2_1_3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+FIX_HINTS = {
+    "memory": "fuse softmax chain / chunked attention to cut HBM re-reads",
+    "collective": "reorder sharding to turn all-gathers into reduce-scatters; overlap with compute",
+    "compute": "at roofline — increase arithmetic intensity only via larger per-device batch",
+}
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def render_table(results: dict, mesh: str, tags=("",)) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | frac | useful | GiB/dev | colls |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for tag in tags:
+                key = f"{arch}|{shape}|{mesh}" + (f"|{tag}" if tag else "")
+                if key not in results:
+                    continue
+                v = results[key]
+                r = v["roofline"]
+                cc = v["collective"].get("count", {})
+                ccs = ",".join(f"{k.split('-')[1] if '-' in k else k}:{n}" for k, n in sorted(cc.items()))
+                name = arch + (f" [{tag}]" if tag else "")
+                lines.append(
+                    f"| {name} | {shape} | {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | "
+                    f"{_fmt_s(r['collective_s'])} | {r['dominant']} | {r['roofline_frac']:.3f} | "
+                    f"{r['useful_flops_ratio']:.2f} | "
+                    f"{v['memory']['peak_bytes_per_device']/2**30:.1f} | {ccs} |"
+                )
+    return "\n".join(lines)
+
+
+def render_dryrun(results: dict) -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | FLOPs/dev | bytes/dev | wire B/dev | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("single_pod", "multi_pod"):
+                key = f"{arch}|{shape}|{mesh}"
+                if key not in results:
+                    continue
+                v = results[key]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {v['compile_s']:.1f} | "
+                    f"{v['flops_per_device']:.3e} | {v['bytes_per_device']:.3e} | "
+                    f"{v['collective']['total']:.3e} | "
+                    f"{v['memory']['peak_bytes_per_device']/2**30:.2f} |"
+                )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--dryrun", action="store_true")
+    args = ap.parse_args()
+    results = json.loads(RESULTS.read_text())
+    if args.dryrun:
+        print(render_dryrun(results))
+    else:
+        print(render_table(results, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

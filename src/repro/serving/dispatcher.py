@@ -1,0 +1,119 @@
+"""POTUS request dispatcher — the paper's system translated to an LM fleet.
+
+Mapping (DESIGN.md §3): inference requests are *tuples*; model replicas are
+*instances* of one "serve" component; hosts are *containers*; ``U[k,k']`` is
+the inter-host transfer cost; per-replica outstanding work is ``Q_in``; the
+frontends' pending-request buffers are the spout output queues, whose
+lookahead window holds *predicted* future requests (pre-admitted as
+speculative prefill).
+
+Each scheduling slot the dispatcher runs Algorithm 1 (the same
+``core.potus.potus_schedule`` the simulators use) and returns how many
+requests each frontend sends to each replica.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.potus import make_problem, potus_schedule
+from repro.core.topology import Component, build_topology
+from repro.core.network import NetworkCosts
+
+__all__ = ["DispatcherConfig", "PotusDispatcher"]
+
+
+@dataclasses.dataclass
+class DispatcherConfig:
+    V: float = 1.0
+    beta: float = 1.0
+    window: int = 0  # lookahead slots (predictive pre-admission)
+    gamma: float = 64.0  # max requests a frontend ships per slot
+
+
+class PotusDispatcher:
+    def __init__(
+        self,
+        n_frontends: int,
+        replica_hosts: np.ndarray,  # (R,) host id per replica
+        frontend_hosts: np.ndarray,  # (F,) host id per frontend
+        host_costs: np.ndarray,  # (n_hosts, n_hosts) per-request transfer cost
+        replica_rates: np.ndarray,  # (R,) requests/slot service capacity
+        cfg: DispatcherConfig = DispatcherConfig(),
+    ):
+        R = len(replica_hosts)
+        F = n_frontends
+        self.cfg = cfg
+        app = [
+            Component("frontend", 0, True, parallelism=F, successors=(1,)),
+            Component("serve", 0, False, parallelism=R,
+                      proc_capacity=float(np.mean(replica_rates))),
+        ]
+        self.topo = build_topology([app], gamma=cfg.gamma)
+        self.mu = np.zeros(self.topo.n_instances, np.float32)
+        self.mu[F:] = np.asarray(replica_rates, np.float32)  # per-replica capacity
+        placement = np.concatenate([frontend_hosts, replica_hosts]).astype(np.int32)
+        K = int(host_costs.shape[0])
+        self.net = NetworkCosts(
+            name="serving-fleet",
+            n_servers=K,
+            n_containers=K,
+            server_dist=np.asarray(host_costs, np.float32),
+            container_server=np.arange(K, dtype=np.int32),
+            U=np.asarray(host_costs, np.float32),
+        )
+        self.prob = make_problem(self.topo, self.net, placement)
+        self.F, self.R = F, R
+        # lookahead window per frontend: predicted request counts per slot
+        self.window = np.zeros((F, cfg.window + 1), np.float32)
+        self.comm_cost_total = 0.0
+        self._u_pair = self.net.U[np.ix_(placement, placement)]
+
+    def observe_prediction(self, predicted: np.ndarray) -> None:
+        """predicted: (F, window+1) request counts for slots t..t+W."""
+        self.window = np.asarray(predicted, np.float32).reshape(self.F, -1)
+
+    def route(self, arrivals: np.ndarray, replica_backlogs: np.ndarray) -> np.ndarray:
+        """One slot of Algorithm 1.
+
+        arrivals: (F,) new requests at each frontend this slot;
+        replica_backlogs: (R,) outstanding work per replica (tokens/requests).
+        Returns (F, R) integer assignment counts; updates the window state.
+        """
+        I, C = self.topo.n_instances, self.topo.n_components
+        self.window[:, 0] += np.asarray(arrivals, np.float32)
+
+        q_in = np.zeros(I, np.float32)
+        q_in[self.F:] = np.asarray(replica_backlogs, np.float32)
+        q_out = np.zeros((I, C), np.float32)
+        q_out[: self.F, 1] = self.window.sum(axis=1)
+        must = np.zeros((I, C), np.float32)
+        must[: self.F, 1] = self.window[:, 0]
+
+        X = np.asarray(
+            potus_schedule(
+                self.prob,
+                jnp.asarray(self.net.U),
+                jnp.asarray(q_in),
+                jnp.asarray(q_out),
+                jnp.asarray(must),
+                float(self.cfg.V),
+                float(self.cfg.beta),
+            )
+        )
+        self.comm_cost_total += float((X * self._u_pair).sum())
+        assign = X[: self.F, self.F:]  # (F, R)
+        # drain the window in ascending lookahead order (eq. 4 semantics)
+        shipped = assign.sum(axis=1)
+        for f in range(self.F):
+            rem = shipped[f]
+            for w in range(self.window.shape[1]):
+                take = min(rem, self.window[f, w])
+                self.window[f, w] -= take
+                rem -= take
+        # shift the window: next slot's prediction becomes current
+        self.window[:, :-1] = self.window[:, 1:]
+        self.window[:, -1] = 0.0
+        return np.floor(assign).astype(np.int64)

@@ -1,0 +1,134 @@
+"""Single-replica batched serving engine (continuous batching over a fixed
+slot grid).
+
+A replica owns one KV cache of shape (L, max_batch, max_len, ...); requests
+claim free slots, are prefetched (prompt prefill with batch=1, scattered into
+the slot), then advance one token per ``step()`` together with every other
+active slot. Finished slots are recycled. Greedy sampling (argmax) keeps the
+engine deterministic for tests.
+
+Queue-depth accounting (``backlog_tokens``) is what the POTUS dispatcher
+consumes as ``Q_in`` (paper eq. 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # prompt
+    max_new: int = 16
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, max_batch: int = 4, max_len: int = 128,
+                 service_rate: float = 1.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        # tokens of service capacity per scheduler slot (heterogeneity knob)
+        self.service_rate = service_rate
+        self._credit = 0.0
+
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), model_zoo.cache_spec(cfg, max_batch, max_len)
+        )
+        self.pos = jnp.zeros((max_batch,), jnp.int32)
+        self.cur_tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self.active = np.zeros(max_batch, bool)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []  # admitted, awaiting a slot
+        self._pending_emit: list[tuple[int, int]] = []
+
+        self._decode = jax.jit(partial(model_zoo.decode_step, cfg=self.cfg))
+        self._prefill = jax.jit(
+            lambda params, batch: model_zoo.prefill(params, self.cfg, batch, max_len=self.max_len)
+        )
+
+    # ---- dispatcher-facing metrics -------------------------------------
+    @property
+    def backlog_tokens(self) -> float:
+        """Outstanding work in tokens (queued prompts + remaining decodes)."""
+        q = sum(len(r.tokens) + r.max_new for r in self.queue)
+        a = sum(
+            (r.max_new - len(r.generated)) for r in self.slot_req if r is not None and not r.done
+        )
+        return float(q + a)
+
+    @property
+    def n_free_slots(self) -> int:
+        return int((~self.active).sum())
+
+    # ---- request lifecycle ----------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit_one(self) -> bool:
+        if not self.queue or not (~self.active).any():
+            return False
+        slot = int(np.nonzero(~self.active)[0][0])
+        req = self.queue.pop(0)
+        prompt = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+        plen = prompt.shape[1]
+        # scatter the batch=1 cache into this slot
+        def put(dst, src):
+            if dst.ndim >= 3 and src.shape[0] == dst.shape[0]:  # (L, 1, ...) -> slot
+                return jax.lax.dynamic_update_slice_in_dim(dst, src.astype(dst.dtype), slot, axis=1)
+            return dst
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        self.cur_tok = self.cur_tok.at[slot, 0].set(nxt)
+        self.pos = self.pos.at[slot].set(plen)
+        self.active[slot] = True
+        req.slot = slot
+        req.generated.append(int(nxt))
+        self._pending_emit.append((req.rid, int(nxt)))
+        self.slot_req[slot] = req
+        return True
+
+    def step(self) -> list[tuple[int, int]]:
+        """Advance one scheduler slot; returns [(rid, token)] emitted."""
+        self._credit += self.service_rate
+        emitted: list[tuple[int, int]] = []
+        while self._credit >= 1.0:
+            emitted.extend(self._pending_emit)
+            self._pending_emit.clear()
+            self._credit -= 1.0
+            while self._admit_one():
+                pass
+            if not self.active.any():
+                break
+            logits, self.cache = self._decode(
+                self.params, token=self.cur_tok, pos=self.pos, cache=self.cache
+            )
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            self.cur_tok = nxt[:, None]
+            self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
+            for slot in np.nonzero(self.active)[0]:
+                req = self.slot_req[slot]
+                tok = int(nxt[slot])
+                req.generated.append(tok)
+                emitted.append((req.rid, tok))
+                if len(req.generated) >= req.max_new or self.pos[slot] >= self.max_len - 1:
+                    req.done = True
+                    self.active[slot] = False
+                    self.slot_req[slot] = None
+        emitted.extend(self._pending_emit)
+        self._pending_emit.clear()
+        return emitted

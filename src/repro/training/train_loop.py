@@ -1,0 +1,138 @@
+"""Loss + train-step builders shared by smoke tests, examples, the launcher
+and the dry-run.
+
+``make_train_step`` returns a pure function
+    train_step(state, batch) -> (state, metrics)
+with ``state = {params, opt: {m, v, step}, router_state, err?}``. Under
+``jax.jit`` + ``NamedSharding`` the data-parallel gradient reduction is
+implicit (GSPMD inserts the reduce-scatter/all-reduce), so the same function
+serves 1 device and 512.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.models.moe import init_router_state
+
+from .compression import compress_grads, init_error_state
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+__all__ = ["TrainConfig", "make_loss_fn", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    remat: str = "none"  # none | full | dots | dots_no_batch
+    microbatches: int = 1  # gradient accumulation
+    grad_compression: bool = False
+    moe_aux_weight: float = 0.01
+    z_loss: float = 0.0
+
+
+def make_loss_fn(cfg, tcfg: TrainConfig):
+    def loss_fn(params, batch, router_state):
+        logits, aux = model_zoo.forward(
+            params, cfg, batch, router_state=router_state, remat=tcfg.remat
+        )
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub" and "patches" in batch:
+            # labels cover the concatenated (patches + tokens) sequence
+            pass
+        logits32 = logits.astype(jnp.float32)
+        valid = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        logz = jax.nn.logsumexp(logits32, axis=-1)
+        # one-hot contraction instead of take_along_axis: gathers across a
+        # vocab-sharded (TP) logits tensor would force an all-gather; the
+        # masked reduction shards cleanly and fuses.
+        onehot = jax.nn.one_hot(safe, logits32.shape[-1], dtype=logits32.dtype)
+        gold = jnp.sum(logits32 * onehot, axis=-1)
+        ce = (logz - gold) * valid
+        ntok = jnp.maximum(valid.sum(), 1)
+        loss = ce.sum() / ntok
+        if tcfg.z_loss:
+            loss = loss + tcfg.z_loss * jnp.mean(jnp.square(logz) * valid)
+        if cfg.moe:
+            loss = loss + tcfg.moe_aux_weight * aux["moe_aux_loss"] / max(cfg.n_layers, 1)
+        metrics = dict(
+            loss=loss,
+            ce=ce.sum() / ntok,
+            ntok=ntok,
+            moe_aux=aux["moe_aux_loss"],
+        )
+        return loss, (metrics, aux["router_state"])
+
+    return loss_fn
+
+
+def init_train_state(key, cfg, tcfg: TrainConfig) -> dict:
+    params = model_zoo.init(key, cfg)
+    state = dict(
+        params=params,
+        opt=init_opt_state(params, tcfg.opt),
+        router_state=init_router_state(cfg) if cfg.moe else jnp.zeros((1,), jnp.float32),
+    )
+    if tcfg.grad_compression:
+        state["err"] = init_error_state(params)
+    return state
+
+
+def _split_microbatches(batch, n):
+    return [jax.tree.map(lambda a: a[i::n], batch) for i in range(n)]
+
+
+def make_train_step(cfg, tcfg: TrainConfig, grad_specs=None):
+    """``grad_specs``: optional PartitionSpec pytree (same structure as
+    params). Constraining gradients to the ZeRO layout turns the DP gradient
+    all-reduce into a reduce-scatter (half the wire) — the shard-local
+    optimizer update then needs no gathered gradient."""
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        rs = state["router_state"]
+
+        if tcfg.microbatches > 1:
+            micro = _split_microbatches(batch, tcfg.microbatches)
+
+            def acc_step(carry, mb):
+                g_acc, rs, loss_acc = carry
+                (loss, (metrics, rs_new)), g = grad_fn(params, mb, rs)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                rs = rs_new if rs_new is not None else rs
+                return (g_acc, rs, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, rs, loss_sum), metrics = jax.lax.scan(
+                acc_step, (g0, rs, jnp.float32(0)),
+                jax.tree.map(lambda *xs: jnp.stack(xs), *micro),
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, g_sum)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss_sum / tcfg.microbatches
+        else:
+            (loss, (metrics, rs_new)), grads = grad_fn(params, batch, rs)
+            rs = rs_new if rs_new is not None else rs
+
+        if grad_specs is not None:
+            grads = jax.tree.map(
+                lambda g, sp: jax.lax.with_sharding_constraint(g, sp), grads, grad_specs
+            )
+        if tcfg.grad_compression:
+            grads, new_err = compress_grads(grads, state["err"])
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, state["opt"], tcfg.opt)
+        metrics.update(opt_metrics)
+        new_state = dict(params=new_params, opt=new_opt, router_state=rs)
+        if tcfg.grad_compression:
+            new_state["err"] = new_err
+        return new_state, metrics
+
+    return train_step

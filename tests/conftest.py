@@ -1,0 +1,43 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run forces 512 in its own
+# process); keep any accidental XLA_FLAGS from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_topology,
+    container_costs,
+    fat_tree,
+    feasible_rates,
+    random_apps,
+    t_heron_placement,
+)
+
+
+@pytest.fixture(scope="session")
+def small_system():
+    """5-app paper-profile system on a fat-tree — shared across tests."""
+    rng = np.random.default_rng(0)
+    topo = build_topology(random_apps(rng, n_apps=5), gamma=24.0)
+    server_dist, _ = fat_tree(4)
+    net = container_costs("fat-tree", server_dist)
+    rates = feasible_rates(topo, utilization=0.7)
+    placement = t_heron_placement(topo, net, rates, max_per_container=8)
+    return topo, net, rates, placement
+
+
+@pytest.fixture(scope="session")
+def tiny_system():
+    """3-component chain, parallelism 2 — enumerable by brute force."""
+    rng = np.random.default_rng(1)
+    from repro.core import linear_app
+
+    topo = build_topology([linear_app(3, parallelism=2, mu=4.0)], gamma=6.0)
+    server_dist, _ = fat_tree(4)
+    net = container_costs("fat-tree", server_dist)
+    rates = feasible_rates(topo, utilization=0.6)
+    placement = t_heron_placement(topo, net, rates, max_per_container=4)
+    return topo, net, rates, placement

@@ -1,0 +1,102 @@
+"""System-level behaviour: queue dynamics invariants, stability (Thm. 1),
+the [O(V), O(1/V)] trade-off, predictive-service gains, engine consistency."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimConfig,
+    poisson_arrivals,
+    run_cohort_sim,
+    run_sim,
+)
+
+T = 400
+
+
+@pytest.fixture(scope="module")
+def arrivals(small_system):
+    topo, net, rates, placement = small_system
+    rng = np.random.default_rng(7)
+    return poisson_arrivals(rng, rates, T + 40)
+
+
+def test_queues_stay_finite_and_nonneg(small_system, arrivals):
+    topo, net, rates, placement = small_system
+    res = run_sim(topo, net, placement, arrivals, T, SimConfig(V=3.0, window=0))
+    assert np.isfinite(res.backlog).all()
+    assert (res.q_in_total >= -1e-4).all()
+    assert (res.q_out_total >= -1e-4).all()
+    fs = res.final_state
+    assert (np.asarray(fs.q_in) >= -1e-4).all()
+    assert (np.asarray(fs.q_rem) >= -1e-4).all()
+    assert (np.asarray(fs.q_out_bolt) >= -1e-4).all()
+
+
+def test_stability_under_feasible_rates(small_system, arrivals):
+    """Theorem 1: backlog stays bounded when arrival < service capacity."""
+    topo, net, rates, placement = small_system
+    res = run_sim(topo, net, placement, arrivals, T, SimConfig(V=3.0, window=0))
+    first = res.backlog[T // 4 : T // 2].mean()
+    last = res.backlog[-T // 4 :].mean()
+    assert last < 2.0 * first + 50.0, "backlog drifting upward: instability"
+
+
+def test_v_tradeoff(small_system, arrivals):
+    """Fig. 5 / Thm. 1: cost decreases and backlog increases with V."""
+    topo, net, rates, placement = small_system
+    lo = run_sim(topo, net, placement, arrivals, T, SimConfig(V=1.0, window=0))
+    hi = run_sim(topo, net, placement, arrivals, T, SimConfig(V=10.0, window=0))
+    assert hi.avg_cost <= lo.avg_cost + 1e-3
+    assert hi.avg_backlog > lo.avg_backlog
+
+
+def test_potus_cheaper_than_shuffle(small_system, arrivals):
+    """§5.2.1: POTUS outperforms Shuffle on communication cost."""
+    topo, net, rates, placement = small_system
+    p = run_sim(topo, net, placement, arrivals, T, SimConfig(V=5.0, window=0))
+    s = run_sim(topo, net, placement, arrivals, T, SimConfig(V=5.0, window=0, scheduler="shuffle"))
+    assert p.avg_cost < s.avg_cost
+
+
+def test_tuple_conservation_cohort(small_system, arrivals):
+    """Every measured arriving tuple's descendants eventually complete."""
+    topo, net, rates, placement = small_system
+    r = run_cohort_sim(topo, net, placement, arrivals, None, T, SimConfig(V=1.0, window=0))
+    assert r.completed_frac > 0.95
+    assert np.isfinite(r.avg_response)
+
+
+def test_window_reduces_response(small_system, arrivals):
+    """Fig. 4: lookahead cuts response; W=0 is the no-prediction case."""
+    topo, net, rates, placement = small_system
+    resp = {}
+    for W in (0, 6, 16):
+        r = run_cohort_sim(topo, net, placement, arrivals, None, T,
+                           SimConfig(V=1.0, window=W))
+        resp[W] = r.avg_response
+    assert resp[6] < resp[0]
+    assert resp[16] < resp[6]
+    assert resp[16] < 0.35 * resp[0], f"W=16 should collapse response: {resp}"
+
+
+def test_engines_agree_on_backlog_and_cost(small_system, arrivals):
+    """JAX scan engine and cohort engine implement the same dynamics."""
+    topo, net, rates, placement = small_system
+    cfg = SimConfig(V=2.0, window=0)
+    a = run_sim(topo, net, placement, arrivals, T, cfg)
+    b = run_cohort_sim(topo, net, placement, arrivals, None, T, cfg, warmup=0)
+    # Same scheduler and dynamics, but price *ties* are broken on ~1e-7
+    # float-accumulation noise, so individual trajectories diverge chaotically
+    # onto different near-optimal paths; long-run means must still agree.
+    rel_b = abs(a.backlog[50:].mean() - b.backlog[50:].mean()) / max(a.backlog[50:].mean(), 1)
+    rel_c = abs(a.comm_cost[50:].mean() - b.comm_cost[50:].mean()) / max(a.comm_cost[50:].mean(), 1)
+    assert rel_b < 0.15, (a.backlog[50:].mean(), b.backlog[50:].mean())
+    assert rel_c < 0.10, (a.comm_cost[50:].mean(), b.comm_cost[50:].mean())
+
+
+def test_window_counts_in_backlog_not_cost_explosion(small_system, arrivals):
+    """Perfect prediction incurs almost no extra communication cost (§5.2.1)."""
+    topo, net, rates, placement = small_system
+    w0 = run_sim(topo, net, placement, arrivals, T, SimConfig(V=3.0, window=0))
+    w5 = run_sim(topo, net, placement, arrivals, T, SimConfig(V=3.0, window=5))
+    assert w5.avg_cost < w0.avg_cost * 1.05

@@ -1,0 +1,84 @@
+"""Predictors + mis-prediction models (paper §5.1 / §5.2.2)."""
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, poisson_arrivals, run_cohort_sim
+from repro.core.prediction import (
+    PREDICTORS,
+    all_true_negative,
+    false_positive,
+    mse,
+    predict_series,
+)
+
+
+@pytest.fixture(scope="module")
+def series():
+    rng = np.random.default_rng(3)
+    return rng.poisson(4.0, size=300).astype(np.float64)
+
+
+@pytest.mark.parametrize("name", sorted(PREDICTORS))
+def test_predictor_causal_and_reasonable(name, series):
+    rng = np.random.default_rng(0)
+    pred = PREDICTORS[name](series, rng)
+    assert pred.shape == series.shape
+    assert np.isfinite(pred).all()
+    assert (pred >= 0).all() or name in ("kalman", "prophet")  # may dip <0 pre-round
+    # causal: prediction at t must not depend on series[t:]
+    series2 = series.copy()
+    series2[200:] += 100
+    rng2 = np.random.default_rng(0)
+    pred2 = PREDICTORS[name](series2, rng2)
+    np.testing.assert_allclose(pred[:200], pred2[:200])
+    # better than predicting zero on a stationary stream
+    err = mse(pred[50:, None, None], series[50:, None, None])
+    err_zero = mse(np.zeros_like(series[50:, None, None]), series[50:, None, None])
+    assert err < err_zero
+
+
+def test_predict_series_shapes(series):
+    arr = np.stack([series, np.zeros_like(series)], axis=1)[:, :, None]  # (T, 2, 1)
+    rng = np.random.default_rng(0)
+    pred = predict_series("ma", arr, rng)
+    assert pred.shape == arr.shape
+    assert (pred[:, 1, 0] == 0).all()  # silent streams stay silent
+    assert (pred >= 0).all() and (pred == np.rint(pred)).all()
+
+
+def test_extremes(series):
+    arr = series[:, None, None].astype(np.float32)
+    assert (all_true_negative(arr) == 0).all()
+    rng = np.random.default_rng(0)
+    fp = false_positive(arr, x=10.0, rng=rng)
+    assert (fp >= arr).all()
+    phantom_rate = float((fp - arr).sum(axis=(1, 2)).mean())
+    assert 7.0 < phantom_rate < 13.0  # ~x per slot on average
+
+
+def test_all_true_negative_equals_no_prediction(small_system):
+    """Paper §5.2.2: All-True-Negative is equivalent to W=0."""
+    topo, net, rates, placement = small_system
+    rng = np.random.default_rng(11)
+    T = 250
+    arr = poisson_arrivals(rng, rates, T + 30)
+    none = run_cohort_sim(topo, net, placement, arr, None, T, SimConfig(V=1.0, window=0))
+    atn = run_cohort_sim(topo, net, placement, arr, all_true_negative(arr), T,
+                         SimConfig(V=1.0, window=4))
+    assert abs(none.avg_response - atn.avg_response) < 0.35 * max(none.avg_response, 1.0)
+
+
+def test_false_positive_hurts_at_large_x(small_system):
+    """Fig. 6c: heavy false positives erase the predictive gain."""
+    topo, net, rates, placement = small_system
+    rng = np.random.default_rng(13)
+    T = 250
+    arr = poisson_arrivals(rng, rates, T + 30)
+    W = 6
+    perfect = run_cohort_sim(topo, net, placement, arr, None, T, SimConfig(V=1.0, window=W))
+    heavy = run_cohort_sim(
+        topo, net, placement, arr,
+        false_positive(arr, x=60.0, rng=np.random.default_rng(5)), T,
+        SimConfig(V=1.0, window=W),
+    )
+    assert heavy.avg_response > perfect.avg_response

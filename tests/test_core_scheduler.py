@@ -1,0 +1,114 @@
+"""Algorithm 1 correctness: JAX scheduler vs the exact python oracle vs
+brute-force optimum of the per-slot subproblem (15)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import make_problem, potus_prices, potus_schedule
+from repro.core.reference import (
+    potus_schedule_reference,
+    prices_reference,
+    solve_lp_bruteforce,
+)
+
+
+def _np_inputs(topo, net, placement, rng, q_scale=10.0, with_must_send=True):
+    I, C = topo.n_instances, topo.n_components
+    q_in = np.round(rng.uniform(0, q_scale, I)).astype(np.float32)
+    q_in[topo.comp_is_spout[topo.inst_comp]] = 0.0
+    q_out = np.round(rng.uniform(0, q_scale, (I, C))).astype(np.float32)
+    # only successor components have output queues
+    mask = np.zeros((I, C), bool)
+    for i in range(I):
+        for c2 in topo.successors_of_comp(int(topo.inst_comp[i])):
+            mask[i, c2] = True
+    q_out *= mask
+    must = np.zeros((I, C), np.float32)
+    if with_must_send:
+        spout = topo.comp_is_spout[topo.inst_comp]
+        must = np.minimum(q_out, np.round(rng.uniform(0, 3, (I, C)))).astype(np.float32)
+        must *= mask * spout[:, None]
+    return q_in, q_out, must
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_jax_matches_reference_oracle(small_system, seed):
+    topo, net, rates, placement = small_system
+    rng = np.random.default_rng(seed)
+    q_in, q_out, must = _np_inputs(topo, net, placement, rng)
+    prob = make_problem(topo, net, placement)
+    V, beta = 2.0, 1.0
+
+    X_jax = np.asarray(
+        potus_schedule(prob, jnp.asarray(net.U), jnp.asarray(q_in), jnp.asarray(q_out),
+                       jnp.asarray(must), V, beta)
+    )
+    X_ref = potus_schedule_reference(
+        topo.edge_mask_instances(), topo.inst_comp, placement,
+        topo.comp_parallelism, topo.inst_gamma, net.U, q_in, q_out, must, V, beta,
+    )
+    np.testing.assert_allclose(X_jax, X_ref, rtol=1e-5, atol=1e-4)
+
+
+def test_prices_match_reference(small_system):
+    topo, net, rates, placement = small_system
+    rng = np.random.default_rng(42)
+    q_in, q_out, _ = _np_inputs(topo, net, placement, rng)
+    prob = make_problem(topo, net, placement)
+    l_jax = np.asarray(potus_prices(prob, jnp.asarray(net.U), jnp.asarray(q_in),
+                                    jnp.asarray(q_out), 2.0, 1.0))
+    l_ref = prices_reference(topo.edge_mask_instances(), topo.inst_comp, placement,
+                             net.U, q_in, q_out, 2.0, 1.0)
+    finite = np.isfinite(l_ref)
+    assert (np.isfinite(l_jax) == finite).all()
+    np.testing.assert_allclose(l_jax[finite], l_ref[finite], rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_greedy_is_lp_optimal(tiny_system, seed):
+    """Algorithm 1 solves subproblem (15) exactly (paper §4.1)."""
+    topo, net, rates, placement = tiny_system
+    rng = np.random.default_rng(seed + 100)
+    q_in, q_out, _ = _np_inputs(topo, net, placement, rng, q_scale=4.0, with_must_send=False)
+    em = topo.edge_mask_instances()
+    l = prices_reference(em, topo.inst_comp, placement, net.U, q_in, q_out, 2.0, 1.0)
+    X_ref = potus_schedule_reference(
+        em, topo.inst_comp, placement, topo.comp_parallelism, topo.inst_gamma,
+        net.U, q_in, q_out, np.zeros_like(q_out), 2.0, 1.0,
+    )
+    l_fin = np.where(np.isfinite(l), l, 0.0)
+    obj_greedy = float((l_fin * X_ref).sum())
+    obj_opt, _ = solve_lp_bruteforce(em, topo.inst_comp, topo.inst_gamma, q_out, l, max_units=6)
+    assert obj_greedy <= obj_opt + 1e-6
+
+
+class TestConstraints:
+    """Feasibility of the vectorized scheduler (eqs. 1 and 10)."""
+
+    @given(seed=st.integers(0, 10_000), v=st.floats(0.1, 20.0), beta=st.floats(0.2, 3.0))
+    @settings(max_examples=25, deadline=None)
+    def test_feasible(self, seed, v, beta):
+        topo, net, rates, placement = self._system
+        rng = np.random.default_rng(seed)
+        q_in, q_out, must = _np_inputs(topo, net, placement, rng)
+        prob = make_problem(topo, net, placement)
+        X = np.asarray(potus_schedule(prob, jnp.asarray(net.U), jnp.asarray(q_in),
+                                      jnp.asarray(q_out), jnp.asarray(must), v, beta))
+        em = topo.edge_mask_instances()
+        assert (X >= -1e-5).all()
+        assert (X[~em] == 0).all()
+        # per-component shipment <= q_out (eq. 10); mandatory dispatch included
+        comp_onehot = np.eye(topo.n_components)[topo.inst_comp]
+        shipped = X @ comp_onehot
+        assert (shipped <= q_out + 1e-3).all()
+        # capacity (eq. 1) can only be exceeded by the mandatory dispatch
+        over = X.sum(axis=1) - topo.inst_gamma
+        assert (over <= must.sum(axis=1) + 1e-3).all()
+        # mandatory same-slot admission (eq. 4)
+        assert (shipped >= must - 1e-3).all()
+
+    @pytest.fixture(autouse=True)
+    def _bind(self, small_system):
+        type(self)._system = small_system

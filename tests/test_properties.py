@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    SimConfig,
+    build_topology,
+    container_costs,
+    fat_tree,
+    feasible_rates,
+    make_problem,
+    poisson_arrivals,
+    potus_schedule,
+    random_apps,
+    run_sim,
+    t_heron_placement,
+)
+from repro.roofline.hlo_cost import _shape_elems_bytes, analyze_hlo
+
+
+class TestSchedulerProperties:
+    @pytest.fixture(autouse=True)
+    def _bind(self, small_system):
+        type(self)._sys = small_system
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_more_pressure_ships_more(self, seed):
+        """Monotonicity: scaling all output queues up never ships less in
+        total (prices only become more negative)."""
+        topo, net, rates, placement = self._sys
+        rng = np.random.default_rng(seed)
+        I, C = topo.n_instances, topo.n_components
+        mask = np.zeros((I, C), np.float32)
+        for i in range(I):
+            for c2 in topo.successors_of_comp(int(topo.inst_comp[i])):
+                mask[i, c2] = 1.0
+        q_in = np.round(rng.uniform(0, 5, I)).astype(np.float32)
+        q_out = np.round(rng.uniform(0, 5, (I, C))).astype(np.float32) * mask
+        prob = make_problem(topo, net, placement)
+        zero = jnp.zeros((I, C), jnp.float32)
+        X1 = potus_schedule(prob, jnp.asarray(net.U), jnp.asarray(q_in),
+                            jnp.asarray(q_out), zero, 2.0, 1.0)
+        X2 = potus_schedule(prob, jnp.asarray(net.U), jnp.asarray(q_in),
+                            jnp.asarray(q_out * 3.0), zero, 2.0, 1.0)
+        assert float(X2.sum()) >= float(X1.sum()) - 1e-4
+
+    @given(v1=st.floats(0.1, 5.0), scale=st.floats(1.5, 10.0), seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_higher_v_never_ships_to_costlier_targets_more(self, v1, scale, seed):
+        """Total shipped volume is non-increasing in V (prices rise with V)."""
+        topo, net, rates, placement = self._sys
+        rng = np.random.default_rng(seed)
+        I, C = topo.n_instances, topo.n_components
+        mask = np.zeros((I, C), np.float32)
+        for i in range(I):
+            for c2 in topo.successors_of_comp(int(topo.inst_comp[i])):
+                mask[i, c2] = 1.0
+        q_in = np.round(rng.uniform(0, 8, I)).astype(np.float32)
+        q_out = np.round(rng.uniform(0, 8, (I, C))).astype(np.float32) * mask
+        prob = make_problem(topo, net, placement)
+        zero = jnp.zeros((I, C), jnp.float32)
+        lo = potus_schedule(prob, jnp.asarray(net.U), jnp.asarray(q_in),
+                            jnp.asarray(q_out), zero, v1, 1.0)
+        hi = potus_schedule(prob, jnp.asarray(net.U), jnp.asarray(q_in),
+                            jnp.asarray(q_out), zero, v1 * scale, 1.0)
+        assert float(hi.sum()) <= float(lo.sum()) + 1e-3
+
+
+class TestSimulatorProperties:
+    @given(seed=st.integers(0, 50), util=st.floats(0.3, 0.75))
+    @settings(max_examples=6, deadline=None)
+    def test_stability_across_random_systems(self, seed, util):
+        """Thm 1: any feasible random system stays stable under POTUS."""
+        rng = np.random.default_rng(seed)
+        topo = build_topology(random_apps(rng, n_apps=2), gamma=24.0)
+        sd, _ = fat_tree(4)
+        net = container_costs("ft", sd)
+        rates = feasible_rates(topo, utilization=util)
+        placement = t_heron_placement(topo, net, rates, max_per_container=8)
+        T = 250
+        arr = poisson_arrivals(rng, rates, T + 10)
+        res = run_sim(topo, net, placement, arr, T, SimConfig(V=2.0, window=0))
+        first = res.backlog[T // 4: T // 2].mean()
+        last = res.backlog[-T // 4:].mean()
+        assert np.isfinite(res.backlog).all()
+        assert last < 2.5 * first + 100.0
+
+
+class TestHloParserProperties:
+    @given(
+        dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+        dt=st.sampled_from(["f32", "bf16", "s32", "u8", "pred"]),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_shape_bytes(self, dims, dt):
+        from repro.roofline.hlo_cost import _DTYPE_BYTES
+
+        s = f"{dt}[{','.join(map(str, dims))}]{{0}}"
+        elems, nbytes = _shape_elems_bytes(s)
+        want = int(np.prod(dims)) if dims else 1
+        assert elems == want
+        assert nbytes == want * _DTYPE_BYTES[dt]
+
+    @given(n=st.integers(1, 12), m=st.integers(8, 64))
+    @settings(max_examples=8, deadline=None)
+    def test_scan_amplification_exact(self, n, m):
+        """analyze_hlo counts scan flops as trip_count x body."""
+        import jax
+
+        def f(y, w):
+            return jax.lax.scan(lambda y, _: (jnp.tanh(y @ w), None), y, None, length=n)[0]
+
+        co = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((m, m), np.float32), jax.ShapeDtypeStruct((m, m), np.float32)
+        ).compile()
+        c = analyze_hlo(co.as_text())
+        dot_flops = 2 * m * m * m * n
+        assert dot_flops <= c.flops <= dot_flops * 1.5 + 10_000
