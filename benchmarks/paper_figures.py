@@ -1,10 +1,21 @@
-"""Reproductions of the paper's Figures 4-6 (one function per figure)."""
+"""Reproductions of the paper's Figures 4-6 (one function per figure).
+
+Every figure is a parameter sweep, expressed as a
+:class:`repro.core.sweep.SweepSpec` and executed by
+:func:`repro.core.sweep.run_sweep`: Figs. 5(a-d) run on the batched JAX
+engine (the whole V-grid is one vmapped ``lax.scan``), Figs. 4/6 need exact
+per-tuple response times and use the sweep API's cohort engine. ``fig5`` also
+emits a ``fig5/sweep_speedup`` row comparing the batched sweep against the
+old per-scenario ``run_sim`` loop on the same grid.
+"""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
-from repro.core import SimConfig, run_cohort_sim, run_sim
-from repro.core.prediction import all_true_negative, false_positive, mse, predict_series
+from repro.core import SimConfig, SweepSpec, run_sim, run_sweep
+from repro.core.prediction import misprediction_scenarios, mse, predictor_scenarios
 
 from .common import QUICK, T_COHORT, T_SIM, Row, arrivals_for, paper_system, timer
 
@@ -18,15 +29,16 @@ def fig4_response_vs_w() -> list[Row]:
         sys = paper_system(topology)
         for kind in ("poisson", "trace"):
             arr = arrivals_for(sys, kind, T_COHORT)
-            vals = []
+            spec = SweepSpec(V=1.0, window=tuple(Ws))
             with timer() as t:
-                for W in Ws:
-                    r = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, None,
-                                       T_COHORT, SimConfig(V=1.0, window=W))
-                    vals.append(r.avg_response)
-                sh = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, None,
-                                    T_COHORT, SimConfig(V=1.0, window=0, scheduler="shuffle"))
-            derived = ";".join(f"W{w}={v:.2f}" for w, v in zip(Ws, vals))
+                sw = run_sweep(sys.topo, sys.net, sys.placement, arr, T_COHORT,
+                               spec, engine="cohort")
+                sh = run_sweep(sys.topo, sys.net, sys.placement, arr, T_COHORT,
+                               SweepSpec(V=1.0, scheduler="shuffle"),
+                               engine="cohort").results[0]
+            derived = ";".join(
+                f"W{s.window}={r.avg_response:.2f}" for s, r in sw
+            )
             derived += f";shuffle={sh.avg_response:.2f}"
             rows.append(Row(f"fig4/{topology}/{kind}",
                             t.dt / (len(Ws) * T_COHORT) * 1e6, derived))
@@ -34,34 +46,75 @@ def fig4_response_vs_w() -> list[Row]:
 
 
 def fig5_backlog_and_cost_vs_v() -> list[Row]:
-    """Fig. 5(a,b): backlog vs V; Fig. 5(c,d): comm cost vs V."""
+    """Fig. 5(a,b): backlog vs V; Fig. 5(c,d): comm cost vs V.
+
+    One batched sweep per topology covers the whole (V x W) grid; a speedup
+    row compares it against N sequential ``run_sim`` calls on the same grid.
+    """
     rows = []
     Vs = [1, 2, 5, 10, 16, 25, 50] if QUICK else [1, 2, 5, 10, 16, 25, 40, 50, 70, 100]
     topos = ["fat-tree"] if QUICK else ["fat-tree", "jellyfish"]
+    speedup_row = None
     for topology in topos:
         sys = paper_system(topology)
         arr = arrivals_for(sys, "trace", T_SIM)
+        spec = SweepSpec(V=tuple(float(v) for v in Vs), window=(0, 5))
+        with timer() as t:
+            sw = run_sweep(sys.topo, sys.net, sys.placement, arr, T_SIM, spec)
+            sh = run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM,
+                         SimConfig(V=1.0, window=0, scheduler="shuffle"))
+        us = t.dt / (len(sw) * T_SIM) * 1e6
         for W in (0, 5):
-            backlogs, costs = [], []
-            with timer() as t:
-                for V in Vs:
-                    r = run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM,
-                                SimConfig(V=float(V), window=W))
-                    backlogs.append(r.avg_backlog)
-                    costs.append(r.avg_cost)
-                sh = run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM,
-                             SimConfig(V=1.0, window=0, scheduler="shuffle"))
+            pts = sw.select(window=W)
             rows.append(Row(
-                f"fig5ab/{topology}/W{W}", t.dt / (len(Vs) * T_SIM) * 1e6,
-                ";".join(f"V{v}={b:.0f}" for v, b in zip(Vs, backlogs))
+                f"fig5ab/{topology}/W{W}", us,
+                ";".join(f"V{v}={r.avg_backlog:.0f}" for v, (_, r) in zip(Vs, pts))
                 + f";shuffle={sh.avg_backlog:.0f}",
             ))
             rows.append(Row(
-                f"fig5cd/{topology}/W{W}", t.dt / (len(Vs) * T_SIM) * 1e6,
-                ";".join(f"V{v}={c:.1f}" for v, c in zip(Vs, costs))
+                f"fig5cd/{topology}/W{W}", us,
+                ";".join(f"V{v}={r.avg_cost:.1f}" for v, (_, r) in zip(Vs, pts))
                 + f";shuffle={sh.avg_cost:.1f}",
             ))
+        if speedup_row is None:
+            speedup_row = _sweep_speedup_row(sys, arr, spec)
+    if speedup_row is not None:
+        rows.append(speedup_row)
     return rows
+
+
+def _sweep_speedup_row(sys, arr: np.ndarray, spec: SweepSpec) -> Row:
+    """Warm batched sweep vs the loop-based implementation on the full
+    figure-style grid (POTUS *and* the Shuffle baseline, as every paper
+    figure runs both). Best-of-2 timings to damp scheduler noise."""
+    spec = SweepSpec(V=spec.V, beta=spec.beta, window=spec.window,
+                     scheduler=("potus", "shuffle"))
+    scenarios = spec.scenarios()
+    # warm both paths (compile outside the timed region, as for a live system)
+    run_sweep(sys.topo, sys.net, sys.placement, arr, T_SIM, spec)
+    for scn in scenarios:
+        run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM, scn.config())
+    t_batch = min(
+        _timed(lambda: run_sweep(sys.topo, sys.net, sys.placement, arr, T_SIM, spec))
+        for _ in range(2)
+    )
+    t_seq = min(
+        _timed(lambda: [run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM, scn.config())
+                        for scn in scenarios])
+        for _ in range(2)
+    )
+    return Row(
+        "fig5/sweep_speedup",
+        t_batch / (len(scenarios) * T_SIM) * 1e6,
+        f"grid={len(scenarios)};batched_s={t_batch:.3f};sequential_s={t_seq:.3f};"
+        f"speedup={t_seq / t_batch:.2f}x",
+    )
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def fig6ab_predictors() -> list[Row]:
@@ -70,24 +123,23 @@ def fig6ab_predictors() -> list[Row]:
     sys = paper_system("fat-tree")
     arr = arrivals_for(sys, "trace", T_COHORT)
     Vs = [1, 5, 10, 20] if QUICK else [1, 2, 5, 10, 15, 20, 30]
-    preds = {"perfect": None}
-    rng = np.random.default_rng(5)
-    for name in ("kalman", "distr", "prophet", "ma", "ewma"):
-        preds[name] = predict_series(name, arr, rng)
-    preds["none"] = all_true_negative(arr)
+    preds = predictor_scenarios(arr, seed=5)
+    arrival_map = {name: (arr, pred) for name, pred in preds.items()}
 
+    spec = SweepSpec(V=tuple(float(v) for v in Vs), window=1,
+                     arrival=tuple(preds.keys()))
+    with timer() as t:
+        sw = run_sweep(sys.topo, sys.net, sys.placement, arrival_map, T_COHORT,
+                       spec, engine="cohort")
+    us = t.dt / (len(sw) * T_COHORT) * 1e6
     for name, pred in preds.items():
         err = 0.0 if pred is None else mse(pred[:T_COHORT], arr[:T_COHORT])
-        costs, resps = [], []
-        with timer() as t:
-            for V in Vs:
-                r = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, pred,
-                                   T_COHORT, SimConfig(V=float(V), window=1))
-                costs.append(r.avg_cost)
-                resps.append(r.avg_response)
-        d = ";".join(f"V{v}:cost={c:.1f}:resp={x:.2f}" for v, c, x in zip(Vs, costs, resps))
-        rows.append(Row(f"fig6ab/{name}", t.dt / (len(Vs) * T_COHORT) * 1e6,
-                        f"mse={err:.2f};{d}"))
+        pts = sw.select(arrival=name)
+        d = ";".join(
+            f"V{v}:cost={r.avg_cost:.1f}:resp={r.avg_response:.2f}"
+            for v, (_, r) in zip(Vs, pts)
+        )
+        rows.append(Row(f"fig6ab/{name}", us, f"mse={err:.2f};{d}"))
     return rows
 
 
@@ -97,16 +149,16 @@ def fig6c_misprediction_extremes() -> list[Row]:
     sys = paper_system("fat-tree")
     arr = arrivals_for(sys, "poisson", T_COHORT)
     Ws = [0, 2, 4, 6, 10] if QUICK else [0, 1, 2, 3, 4, 6, 8, 10]
-    cases = {"perfect": None, "all-true-negative": all_true_negative(arr)}
-    for x in (10, 20, 30):
-        cases[f"false-positive-{x}"] = false_positive(arr, x, np.random.default_rng(x))
-    for name, pred in cases.items():
-        vals = []
-        with timer() as t:
-            for W in Ws:
-                r = run_cohort_sim(sys.topo, sys.net, sys.placement, arr, pred,
-                                   T_COHORT, SimConfig(V=1.0, window=W))
-                vals.append(r.avg_response)
-        rows.append(Row(f"fig6c/{name}", t.dt / (len(Ws) * T_COHORT) * 1e6,
-                        ";".join(f"W{w}={v:.2f}" for w, v in zip(Ws, vals))))
+    cases = misprediction_scenarios(arr, fp_levels=(10.0, 20.0, 30.0))
+    arrival_map = {name: (arr, pred) for name, pred in cases.items()}
+
+    spec = SweepSpec(V=1.0, window=tuple(Ws), arrival=tuple(cases.keys()))
+    with timer() as t:
+        sw = run_sweep(sys.topo, sys.net, sys.placement, arrival_map, T_COHORT,
+                       spec, engine="cohort")
+    us = t.dt / (len(sw) * T_COHORT) * 1e6
+    for name in cases:
+        pts = sw.select(arrival=name)
+        rows.append(Row(f"fig6c/{name}", us,
+                        ";".join(f"W{s.window}={r.avg_response:.2f}" for s, r in pts)))
     return rows

@@ -10,9 +10,10 @@ from .network import NetworkCosts, jellyfish, fat_tree, container_costs
 from .placement import t_heron_placement, instance_traffic
 from .potus import SchedProblem, make_problem, potus_prices, potus_schedule
 from .baselines import shuffle_schedule, jsq_schedule
-from .queues import SimState, init_state, effective_qout, slot_update
-from .simulator import SimConfig, SimResult, run_sim
+from .queues import SimState, init_state, init_state_batch, effective_qout, slot_update
+from .simulator import SimConfig, SimResult, run_sim, sim_step
 from .cohort import CohortResult, run_cohort_sim
+from .sweep import Scenario, SweepSpec, SweepResult, run_sweep
 from .workload import poisson_arrivals, trace_synthetic, feasible_rates, spout_rate_matrix
 from . import prediction
 
@@ -22,8 +23,9 @@ __all__ = [
     "t_heron_placement", "instance_traffic",
     "SchedProblem", "make_problem", "potus_prices", "potus_schedule",
     "shuffle_schedule", "jsq_schedule",
-    "SimState", "init_state", "effective_qout", "slot_update",
-    "SimConfig", "SimResult", "run_sim",
+    "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
+    "SimConfig", "SimResult", "run_sim", "sim_step",
     "CohortResult", "run_cohort_sim",
+    "Scenario", "SweepSpec", "SweepResult", "run_sweep",
     "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",
 ]

@@ -109,7 +109,7 @@ def run_cohort_sim(
     if predicted is None:
         predicted = actual
     prob = make_problem(topo, net, inst_container)
-    sched = _get_scheduler(cfg.scheduler)
+    sched = _get_scheduler(cfg.scheduler, cfg.use_pallas)
 
     I, C = topo.n_instances, topo.n_components
     inst_comp = topo.inst_comp

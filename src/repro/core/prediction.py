@@ -25,6 +25,8 @@ __all__ = [
     "predict_series",
     "all_true_negative",
     "false_positive",
+    "predictor_scenarios",
+    "misprediction_scenarios",
     "PREDICTORS",
     "mse",
 ]
@@ -140,6 +142,53 @@ def false_positive(
     phantom = rng.poisson(x / n_active, size=arrivals.shape).astype(np.float32)
     phantom *= active[None, :, :]
     return arrivals + phantom
+
+
+def predictor_scenarios(
+    arrivals: np.ndarray,
+    names: tuple[str, ...] = ("kalman", "distr", "prophet", "ma", "ewma"),
+    seed: int = 5,
+    include_perfect: bool = True,
+    include_none: bool = True,
+) -> dict[str, np.ndarray | None]:
+    """Named (actual, predicted) arrival scenarios for a sweep (DESIGN.md §6).
+
+    One entry per imperfect predictor (Fig. 6a,b), keyed by predictor name;
+    values are predicted-arrival tensors shaped like ``arrivals`` (``None``
+    means perfect prediction). A single RNG is threaded through in ``names``
+    order so the grid is reproducible from ``seed`` alone.
+    """
+    rng = np.random.default_rng(seed)
+    out: dict[str, np.ndarray | None] = {}
+    if include_perfect:
+        out["perfect"] = None
+    for name in names:
+        out[name] = predict_series(name, arrivals, rng)
+    if include_none:
+        out["none"] = all_true_negative(arrivals)
+    return out
+
+
+def misprediction_scenarios(
+    arrivals: np.ndarray,
+    fp_levels: tuple[float, ...] = (10.0, 20.0, 30.0),
+    include_perfect: bool = True,
+) -> dict[str, np.ndarray | None]:
+    """The Fig. 6c analytic extremes as named sweep scenarios: perfect,
+    All-True-Negative, and False-Positive(x) for each level in ``fp_levels``
+    (each level seeded by its own value, matching the paper benchmark)."""
+    out: dict[str, np.ndarray | None] = {}
+    if include_perfect:
+        out["perfect"] = None
+    out["all-true-negative"] = all_true_negative(arrivals)
+    for x in fp_levels:
+        # integer levels keep the historical seed x; fractional levels get a
+        # distinct seed instead of colliding on int(x)
+        seed = int(x) if float(x).is_integer() else int(round(float(x) * 1e6))
+        out[f"false-positive-{x:g}"] = false_positive(
+            arrivals, x, np.random.default_rng(seed)
+        )
+    return out
 
 
 def mse(pred: np.ndarray, actual: np.ndarray) -> float:

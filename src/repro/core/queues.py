@@ -22,7 +22,7 @@ import numpy as np
 from .potus import SchedProblem
 from .topology import Topology
 
-__all__ = ["SimState", "init_state", "effective_qout", "slot_update"]
+__all__ = ["SimState", "init_state", "init_state_batch", "effective_qout", "slot_update"]
 
 
 @jax.tree_util.register_dataclass
@@ -46,6 +46,17 @@ def init_state(topo: Topology, window: int, arrivals_prefix: np.ndarray) -> SimS
         q_out_bolt=jnp.zeros((I, C), jnp.float32),
         transit=jnp.zeros((I,), jnp.float32),
     )
+
+
+def init_state_batch(topo: Topology, window: int, arrivals_prefixes: np.ndarray) -> SimState:
+    """Stacked initial states for a scenario sweep (DESIGN.md §6).
+
+    ``arrivals_prefixes``: (S, window+1, I, C) — one λ(0..W) prefix per
+    scenario. Returns a :class:`SimState` whose leaves carry a leading
+    scenario axis of size S, ready for ``jax.vmap`` over the sweep.
+    """
+    states = [init_state(topo, window, p) for p in arrivals_prefixes]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
 
 def effective_qout(prob: SchedProblem, state: SimState) -> jax.Array:

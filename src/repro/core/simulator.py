@@ -5,6 +5,11 @@
 This engine is exact for queue backlogs and communication costs (the Fig. 5
 metrics) and scales to thousands of instances. Per-tuple response times
 (Figs. 4/6) come from the cohort engine in ``core.cohort``.
+
+The per-slot step is exposed as :func:`sim_step`, a pure function of the
+static problem plus the scenario parameters (V, beta) — ``core.sweep`` maps
+it over a whole grid of scenarios with ``jax.vmap`` so an entire parameter
+sweep runs as one compiled computation (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -21,7 +26,16 @@ from .potus import SchedProblem, make_problem, potus_schedule
 from .queues import SimState, effective_qout, init_state, slot_update
 from .topology import Topology
 
-__all__ = ["SimResult", "run_sim", "SimConfig"]
+__all__ = ["SimResult", "run_sim", "SimConfig", "sim_step", "pad_arrivals"]
+
+
+def pad_arrivals(arrivals: np.ndarray, n: int) -> np.ndarray:
+    """Zero-pad the arrival tensor to at least ``n`` slots; longer inputs are
+    returned unchanged (callers slice the range they need)."""
+    if arrivals.shape[0] >= n:
+        return arrivals
+    pad = np.zeros((n - arrivals.shape[0],) + arrivals.shape[1:], arrivals.dtype)
+    return np.concatenate([arrivals, pad], axis=0)
 
 
 @dataclasses.dataclass
@@ -51,8 +65,10 @@ class SimResult:
         return float(self.comm_cost.mean())
 
 
-def _get_scheduler(name: str) -> Callable:
+def _get_scheduler(name: str, use_pallas: bool = False) -> Callable:
     if name == "potus":
+        if use_pallas:
+            return partial(potus_schedule, use_pallas=True)
         return potus_schedule
     if name == "shuffle":
         from .baselines import shuffle_schedule
@@ -63,6 +79,33 @@ def _get_scheduler(name: str) -> Callable:
 
         return jsq_schedule
     raise ValueError(f"unknown scheduler {name!r}")
+
+
+def sim_step(
+    prob: SchedProblem,
+    sched: Callable,
+    U: jax.Array,  # (K, K)
+    u_pair: jax.Array,  # (I, I) = U[k(i), k(j)]
+    mu: jax.Array,  # (I,)
+    selectivity_rows: jax.Array,  # (I, C)
+    V: jax.Array,  # scalar — may be traced (one value per sweep scenario)
+    beta: jax.Array,  # scalar — may be traced
+    state: SimState,
+    new_arr: jax.Array,  # (I, C) — λ(t + W + 1) entering the window
+) -> tuple[SimState, tuple[jax.Array, ...]]:
+    """One slot of the paper-§3 dynamics: observe, schedule, update.
+
+    Everything that varies per scenario (state, arrivals, V, beta) is an
+    explicit argument so the step can be ``vmap``-ed over a scenario axis.
+    """
+    q_out = effective_qout(prob, state)
+    must_send = state.q_rem[:, :, 0]
+    X = sched(prob, U, state.q_in, q_out, must_send, V, beta)
+    h = state.q_in.sum() + beta * q_out.sum()  # h(t), eq. (12)
+    cost = (X * u_pair).sum()  # Theta(t), eq. (11)
+    new_state, info = slot_update(prob, state, X, new_arr, mu, selectivity_rows)
+    metrics = (h, cost, state.q_in.sum(), q_out.sum(), info["served"].sum())
+    return new_state, metrics
 
 
 @partial(jax.jit, static_argnames=("scheduler", "use_pallas"))
@@ -78,18 +121,11 @@ def _scan_sim(
     scheduler: str = "potus",
     use_pallas: bool = False,
 ):
-    sched = _get_scheduler(scheduler)
+    sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
 
     def step(state, new_arr):
-        q_out = effective_qout(prob, state)
-        must_send = state.q_rem[:, :, 0]
-        X = sched(prob, U, state.q_in, q_out, must_send, V, beta)
-        h = state.q_in.sum() + beta * q_out.sum()  # h(t), eq. (12)
-        cost = (X * u_pair).sum()  # Theta(t), eq. (11)
-        new_state, info = slot_update(prob, state, X, new_arr, mu, selectivity_rows)
-        metrics = (h, cost, state.q_in.sum(), q_out.sum(), info["served"].sum())
-        return new_state, metrics
+        return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta, state, new_arr)
 
     final, (h, cost, qi, qo, served) = jax.lax.scan(step, state0, arrivals)
     return final, h, cost, qi, qo, served
@@ -105,9 +141,7 @@ def run_sim(
     mu: np.ndarray | None = None,
 ) -> SimResult:
     W = cfg.window
-    if arrivals.shape[0] < T + W + 1:
-        pad = np.zeros((T + W + 1 - arrivals.shape[0],) + arrivals.shape[1:], arrivals.dtype)
-        arrivals = np.concatenate([arrivals, pad], axis=0)
+    arrivals = pad_arrivals(arrivals, T + W + 1)
     prob = make_problem(topo, net, inst_container)
     state0 = init_state(topo, W, arrivals[: W + 1])
     window_stream = jnp.asarray(arrivals[W + 1 : T + W + 1], jnp.float32)

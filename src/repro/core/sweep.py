@@ -1,0 +1,281 @@
+"""Batched scenario-sweep engine (DESIGN.md §6).
+
+The paper's headline results are parameter sweeps — response time vs the
+lookahead window W (Fig. 4), backlog/cost vs the Lyapunov weight V (Fig. 5),
+robustness vs mis-prediction level (Fig. 6). Running each grid point as a
+separate :func:`repro.core.simulator.run_sim` call pays Python dispatch and
+scan overhead N times. Here a sweep is a first-class object:
+
+* :class:`SweepSpec` declares the axes — V, beta, window W, scheduler, and a
+  named *arrival scenario* (seed / predictor / mis-prediction level);
+* :func:`run_sweep` partitions the grid by the axes that change compiled
+  structure (scheduler, window, Pallas path), stacks the per-scenario inputs
+  of each partition, and ``jax.vmap``-s the per-slot :func:`sim_step` inside
+  one ``lax.scan`` — an entire partition runs as a single compiled
+  computation;
+* :class:`SweepResult` returns one :class:`SimResult` per scenario, in grid
+  order, numerically matching the per-scenario ``run_sim`` loop.
+
+The cohort (discrete-event) engine cannot be ``vmap``-ed — it is a Python
+event loop — so ``engine="cohort"`` runs the same grid through
+:func:`run_cohort_sim` sequentially behind the identical API; figures that
+need exact response times use that path, everything else gets the batched
+one. Adding a new scenario is one more axis value, not another Python loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import NetworkCosts
+from .potus import make_problem
+from .queues import init_state, init_state_batch
+from .simulator import SimConfig, SimResult, _get_scheduler, pad_arrivals, sim_step
+from .topology import Topology
+
+__all__ = ["Scenario", "SweepSpec", "SweepResult", "run_sweep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One point of a sweep grid."""
+
+    index: int
+    V: float
+    beta: float
+    window: int
+    scheduler: str
+    arrival: str
+    use_pallas: bool = False
+
+    def config(self) -> SimConfig:
+        return SimConfig(
+            V=self.V,
+            beta=self.beta,
+            window=self.window,
+            scheduler=self.scheduler,
+            use_pallas=self.use_pallas,
+        )
+
+    def matches(self, **axes: Any) -> bool:
+        return all(getattr(self, k) == v for k, v in axes.items())
+
+
+def _as_tuple(v) -> tuple:
+    if isinstance(v, tuple):
+        return v
+    if isinstance(v, (list, np.ndarray)):
+        return tuple(v)
+    return (v,)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative grid of simulator configurations (full cross product).
+
+    ``window``, ``scheduler`` and ``use_pallas`` change the *compiled
+    structure* (state shapes / traced scheduler), so they partition the grid;
+    V, beta and the arrival scenario vary inside one compiled batch.
+    """
+
+    V: tuple = (3.0,)
+    beta: tuple = (1.0,)
+    window: tuple = (0,)
+    scheduler: tuple = ("potus",)
+    arrival: tuple = ("default",)
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        for axis in ("V", "beta", "window", "scheduler", "arrival"):
+            object.__setattr__(self, axis, _as_tuple(getattr(self, axis)))
+        if not isinstance(self.use_pallas, bool):
+            # not an axis: a truthy tuple would silently Pallas-route everything
+            raise TypeError(
+                "use_pallas is a single flag, not a sweep axis; run separate "
+                f"sweeps per backend (got {self.use_pallas!r})"
+            )
+
+    @property
+    def n_scenarios(self) -> int:
+        return (
+            len(self.V) * len(self.beta) * len(self.window)
+            * len(self.scheduler) * len(self.arrival)
+        )
+
+    def scenarios(self) -> list[Scenario]:
+        """Grid order: arrival, scheduler, window, beta outermost; V innermost."""
+        return [
+            Scenario(idx, float(V), float(beta), int(W), sched, arr, self.use_pallas)
+            for idx, (arr, sched, W, beta, V) in enumerate(
+                itertools.product(self.arrival, self.scheduler, self.window, self.beta, self.V)
+            )
+        ]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    spec: SweepSpec
+    scenarios: list[Scenario]
+    results: list  # SimResult | CohortResult, aligned with ``scenarios``
+    n_batches: int  # number of separately-compiled scenario partitions
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    def __iter__(self):
+        return iter(zip(self.scenarios, self.results))
+
+    def select(self, **axes: Any) -> list[tuple[Scenario, Any]]:
+        """All (scenario, result) pairs whose axes match, in grid order."""
+        return [(s, r) for s, r in self if s.matches(**axes)]
+
+    def result(self, **axes: Any):
+        """The single result matching ``axes``; raises if not exactly one."""
+        hits = self.select(**axes)
+        if len(hits) != 1:
+            raise KeyError(f"{axes} matches {len(hits)} scenarios, expected 1")
+        return hits[0][1]
+
+
+@partial(jax.jit, static_argnames=("scheduler", "use_pallas", "shared_inputs"))
+def _scan_sweep(
+    prob,
+    states0,  # SimState pytree, leading scenario axis S (unbatched if shared)
+    streams: jax.Array,  # (S, T, I, C) window-entry streams ((T, I, C) if shared)
+    U: jax.Array,  # (K, K)
+    mu: jax.Array,  # (I,)
+    selectivity_rows: jax.Array,  # (I, C)
+    Vs: jax.Array,  # (S,)
+    betas: jax.Array,  # (S,)
+    scheduler: str = "potus",
+    use_pallas: bool = False,
+    shared_inputs: bool = False,
+):
+    sched = _get_scheduler(scheduler, use_pallas)
+    u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
+
+    def one(state0, stream, V, beta):
+        def step(state, new_arr):
+            return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta, state, new_arr)
+
+        return jax.lax.scan(step, state0, stream)
+
+    # when every scenario in the batch shares one arrival tensor (a pure
+    # V/beta sweep), scan a single stream instead of S stacked copies
+    in_axes = (None, None, 0, 0) if shared_inputs else (0, 0, 0, 0)
+    return jax.vmap(one, in_axes=in_axes)(states0, streams, Vs, betas)
+
+
+def _normalize_arrivals(arrivals, spec: SweepSpec) -> dict[str, tuple[np.ndarray, np.ndarray | None]]:
+    """name -> (actual, predicted|None). A bare array is the scenario
+    ``"default"`` with perfect prediction."""
+    if isinstance(arrivals, np.ndarray):
+        arrivals = {"default": arrivals}
+    out: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
+    for name, val in arrivals.items():
+        if isinstance(val, tuple):
+            actual, predicted = val
+        else:
+            actual, predicted = val, None
+        out[name] = (np.asarray(actual), None if predicted is None else np.asarray(predicted))
+    missing = [a for a in spec.arrival if a not in out]
+    if missing:
+        raise KeyError(f"spec names arrival scenarios {missing} not present in arrivals")
+    return out
+
+
+def run_sweep(
+    topo: Topology,
+    net: NetworkCosts,
+    inst_container: np.ndarray,
+    arrivals,  # np.ndarray | dict[str, np.ndarray | (actual, predicted)]
+    T: int,
+    spec: SweepSpec,
+    mu: np.ndarray | None = None,
+    engine: str = "jax",  # jax (batched) | cohort (sequential, response times)
+) -> SweepResult:
+    """Run every scenario of ``spec`` and return per-scenario results.
+
+    The JAX engine batches all scenarios that share (scheduler, window,
+    use_pallas) into one vmapped ``lax.scan``; results agree elementwise with
+    a per-scenario :func:`run_sim` loop. The cohort engine is a sequential
+    fallback with exact response-time semantics.
+    """
+    scenarios = spec.scenarios()
+    arr_map = _normalize_arrivals(arrivals, spec)
+
+    if engine == "cohort":
+        from .cohort import run_cohort_sim
+
+        if mu is not None:
+            raise ValueError("engine='cohort' has no mu override; it uses topo.inst_mu")
+        results = []
+        for scn in scenarios:
+            actual, predicted = arr_map[scn.arrival]
+            results.append(
+                run_cohort_sim(topo, net, inst_container, actual, predicted, T, scn.config())
+            )
+        return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
+    if engine != "jax":
+        raise ValueError(f"unknown engine {engine!r}")
+    mispredicted = [a for a in spec.arrival if arr_map[a][1] is not None]
+    if mispredicted:
+        raise ValueError(
+            f"arrival scenarios {mispredicted} carry distinct predicted arrivals, which "
+            "only the cohort engine models — pass engine='cohort' (the JAX engine "
+            "treats its single stream as the predicted/actual arrivals combined)"
+        )
+
+    prob = make_problem(topo, net, inst_container)
+    mu_arr = jnp.asarray(mu if mu is not None else topo.inst_mu, jnp.float32)
+    sel_rows = jnp.asarray(topo.selectivity[topo.inst_comp], jnp.float32)
+    U = jnp.asarray(net.U)
+
+    # partition by the axes that change compiled structure
+    groups: dict[tuple, list[Scenario]] = {}
+    for scn in scenarios:
+        groups.setdefault((scn.scheduler, scn.window, scn.use_pallas), []).append(scn)
+
+    results: list[SimResult | None] = [None] * len(scenarios)
+    for (scheduler, W, use_pallas), group in groups.items():
+        shared = len({scn.arrival for scn in group}) == 1
+        if shared:
+            p = pad_arrivals(arr_map[group[0].arrival][0].astype(np.float32, copy=False), T + W + 1)
+            streams = jnp.asarray(p[W + 1 : T + W + 1], jnp.float32)
+            states0 = init_state(topo, W, p[: W + 1])
+        else:
+            # one stacked stream per scenario, even when some scenarios share
+            # an arrival tensor — duplicates cost memory, never correctness;
+            # grids mixing many (V, arrival) pairs could dedup here if needed
+            padded = [
+                pad_arrivals(arr_map[scn.arrival][0].astype(np.float32, copy=False), T + W + 1)
+                for scn in group
+            ]
+            prefixes = np.stack([p[: W + 1] for p in padded])  # (S, W+1, I, C)
+            streams = jnp.asarray(np.stack([p[W + 1 : T + W + 1] for p in padded]), jnp.float32)
+            states0 = init_state_batch(topo, W, prefixes)
+        Vs = jnp.asarray([scn.V for scn in group], jnp.float32)
+        betas = jnp.asarray([scn.beta for scn in group], jnp.float32)
+
+        final, (h, cost, qi, qo, served) = _scan_sweep(
+            prob, states0, streams, U, mu_arr, sel_rows, Vs, betas,
+            scheduler=scheduler, use_pallas=use_pallas, shared_inputs=shared,
+        )
+        h, cost, qi, qo, served = (np.asarray(x) for x in (h, cost, qi, qo, served))
+        final = jax.device_get(final)
+        for s, scn in enumerate(group):
+            results[scn.index] = SimResult(
+                backlog=h[s],
+                comm_cost=cost[s],
+                q_in_total=qi[s],
+                q_out_total=qo[s],
+                served_total=served[s],
+                final_state=jax.tree_util.tree_map(lambda x: x[s], final),
+            )
+    return SweepResult(spec, scenarios, results, n_batches=len(groups))

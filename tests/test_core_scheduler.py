@@ -2,6 +2,8 @@
 brute-force optimum of the per-slot subproblem (15)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,0 +1,40 @@
+"""Docs layer: DESIGN.md/README.md exist and every ``DESIGN.md §N``
+reference in the code resolves to a real section (same check CI runs via
+``tools/check_design_refs.py``)."""
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_design_and_readme_exist():
+    assert (ROOT / "DESIGN.md").exists()
+    assert (ROOT / "README.md").exists()
+
+
+def test_every_design_ref_resolves():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_design_refs.py")],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # the codebase actually cites DESIGN.md — the check must not be vacuous
+    m = re.search(r"checked (\d+) DESIGN\.md references", proc.stdout)
+    assert m and int(m.group(1)) >= 8, proc.stdout
+
+
+def test_design_has_cited_sections():
+    text = (ROOT / "DESIGN.md").read_text(encoding="utf-8")
+    sections = set(re.findall(r"^#{1,6}\s+§(\d+)\b", text, re.MULTILINE))
+    # the sections modules cite today: cohort §2, dispatcher/moe §3,
+    # price kernel §4, config skips §5, sweep engine §6
+    assert {"1", "2", "3", "4", "5", "6"} <= sections
+
+
+def test_readme_mentions_key_entry_points():
+    text = (ROOT / "README.md").read_text(encoding="utf-8")
+    for needle in ("quickstart.py", "sweep_grid.py", "run_sweep", "DESIGN.md",
+                   "ROADMAP.md", "pytest", "benchmarks.run"):
+        assert needle in text, f"README.md should mention {needle}"

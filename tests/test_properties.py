@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

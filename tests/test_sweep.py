@@ -1,0 +1,179 @@
+"""Batched scenario-sweep engine: elementwise agreement with per-scenario
+``run_sim``/``run_cohort_sim`` loops, the Pallas-path regression, and the
+benchmark CSV schema."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimConfig,
+    SweepSpec,
+    poisson_arrivals,
+    run_cohort_sim,
+    run_sim,
+    run_sweep,
+    trace_synthetic,
+)
+
+T = 60
+
+
+@pytest.fixture(scope="module")
+def arrivals(small_system):
+    topo, net, rates, placement = small_system
+    return poisson_arrivals(np.random.default_rng(3), rates, T + 16)
+
+
+class TestSpec:
+    def test_grid_order_and_size(self):
+        spec = SweepSpec(V=(1.0, 2.0), beta=(0.5,), window=(0, 3),
+                         scheduler=("potus", "shuffle"), arrival=("a", "b"))
+        scns = spec.scenarios()
+        assert spec.n_scenarios == len(scns) == 16
+        assert [s.index for s in scns] == list(range(16))
+        # V is the innermost axis
+        assert (scns[0].V, scns[1].V) == (1.0, 2.0)
+        assert scns[0].arrival == scns[7].arrival == "a"
+        assert scns[8].arrival == "b"
+
+    def test_use_pallas_is_not_an_axis(self):
+        with pytest.raises(TypeError):
+            SweepSpec(use_pallas=(False, True))
+
+    def test_scalar_axes_normalized(self):
+        spec = SweepSpec(V=2.0, window=1, scheduler="jsq")
+        assert spec.V == (2.0,) and spec.window == (1,) and spec.scheduler == ("jsq",)
+        assert spec.scenarios()[0].config() == SimConfig(
+            V=2.0, beta=1.0, window=1, scheduler="jsq")
+
+    def test_missing_arrival_scenario_raises(self, small_system, arrivals):
+        topo, net, rates, placement = small_system
+        with pytest.raises(KeyError):
+            run_sweep(topo, net, placement, {"a": arrivals}, T,
+                      SweepSpec(arrival=("a", "missing")))
+
+
+class TestJaxEngineAgreement:
+    def test_grid_matches_sequential_run_sim(self, small_system, arrivals):
+        """(V x W x scheduler) grid agrees elementwise with run_sim calls."""
+        topo, net, rates, placement = small_system
+        spec = SweepSpec(V=(1.0, 5.0, 20.0), window=(0, 2),
+                         scheduler=("potus", "shuffle", "jsq"))
+        sw = run_sweep(topo, net, placement, arrivals, T, spec)
+        assert len(sw) == 18
+        # one compiled batch per (scheduler, window) partition
+        assert sw.n_batches == 6
+        for scn, res in sw:
+            ref = run_sim(topo, net, placement, arrivals, T, scn.config())
+            np.testing.assert_allclose(res.backlog, ref.backlog, rtol=1e-6, atol=1e-4)
+            np.testing.assert_allclose(res.comm_cost, ref.comm_cost, rtol=1e-6, atol=1e-4)
+            np.testing.assert_allclose(res.served_total, ref.served_total,
+                                       rtol=1e-6, atol=1e-4)
+            np.testing.assert_allclose(
+                res.final_state.q_in, ref.final_state.q_in, rtol=1e-5, atol=1e-4)
+
+    def test_multi_arrival_grid(self, small_system, arrivals):
+        """Stacked (non-shared) arrival scenarios match too."""
+        topo, net, rates, placement = small_system
+        other = trace_synthetic(np.random.default_rng(11), rates, T + 16)
+        arrs = {"poisson": arrivals, "trace": other.astype(np.float32)}
+        spec = SweepSpec(V=(2.0, 10.0), arrival=("poisson", "trace"))
+        sw = run_sweep(topo, net, placement, arrs, T, spec)
+        assert sw.n_batches == 1  # same (scheduler, window): one vmapped batch
+        for scn, res in sw:
+            ref = run_sim(topo, net, placement, arrs[scn.arrival], T, scn.config())
+            np.testing.assert_allclose(res.backlog, ref.backlog, rtol=1e-6, atol=1e-4)
+
+    def test_select_and_result(self, small_system, arrivals):
+        topo, net, rates, placement = small_system
+        spec = SweepSpec(V=(1.0, 3.0), window=(0, 1))
+        sw = run_sweep(topo, net, placement, arrivals, T, spec)
+        assert len(sw.select(window=1)) == 2
+        one = sw.result(window=1, V=3.0)
+        assert one.backlog.shape == (T,)
+        with pytest.raises(KeyError):
+            sw.result(window=1)  # ambiguous
+
+
+class TestCohortEngine:
+    def test_matches_sequential_cohort_calls(self, small_system, arrivals):
+        topo, net, rates, placement = small_system
+        pred = np.maximum(arrivals - 1, 0.0).astype(np.float32)
+        arrs = {"perfect": arrivals, "under": (arrivals, pred)}
+        spec = SweepSpec(V=1.0, window=(0, 2), arrival=("perfect", "under"))
+        sw = run_sweep(topo, net, placement, arrs, T, spec, engine="cohort")
+        for scn, res in sw:
+            predicted = None if scn.arrival == "perfect" else pred
+            ref = run_cohort_sim(topo, net, placement, arrivals, predicted, T,
+                                 scn.config())
+            assert res.avg_backlog == pytest.approx(ref.avg_backlog)
+            assert res.avg_cost == pytest.approx(ref.avg_cost)
+            if np.isnan(ref.avg_response):
+                assert np.isnan(res.avg_response)
+            else:
+                assert res.avg_response == pytest.approx(ref.avg_response)
+
+
+class TestPallasPath:
+    def test_use_pallas_invokes_kernel(self, small_system, arrivals):
+        """Regression: SimConfig(use_pallas=True) must actually run the
+        Pallas price kernel (the flag was once silently dropped)."""
+        import repro.kernels.ops as kops
+        from repro.core.potus import potus_schedule
+        from repro.core.simulator import _scan_sim
+        from repro.core.sweep import _scan_sweep
+
+        topo, net, rates, placement = small_system
+        calls = {"n": 0}
+        orig = kops.potus_price
+
+        def spy(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        kops.potus_price = spy
+        try:
+            # the kernel call happens at trace time: drop every cached trace
+            # that could short-circuit it (outer scans AND the inner jitted
+            # scheduler, which other tests may already have traced)
+            _scan_sim.clear_cache()
+            potus_schedule.clear_cache()
+            plain = run_sim(topo, net, placement, arrivals, T,
+                            SimConfig(V=2.0, window=1))
+            assert calls["n"] == 0
+            via_pallas = run_sim(topo, net, placement, arrivals, T,
+                                 SimConfig(V=2.0, window=1, use_pallas=True))
+            assert calls["n"] > 0, "use_pallas=True never reached the Pallas kernel"
+            np.testing.assert_allclose(via_pallas.backlog, plain.backlog,
+                                       rtol=1e-5, atol=1e-3)
+
+            _scan_sweep.clear_cache()
+            potus_schedule.clear_cache()
+            calls["n"] = 0
+            sw = run_sweep(topo, net, placement, arrivals, T,
+                           SweepSpec(V=(1.0, 2.0), use_pallas=True))
+            assert calls["n"] > 0
+            ref = run_sim(topo, net, placement, arrivals, T, SimConfig(V=1.0))
+            np.testing.assert_allclose(sw.results[0].backlog, ref.backlog,
+                                       rtol=1e-5, atol=1e-3)
+        finally:
+            kops.potus_price = orig
+
+
+class TestBenchmarkSchema:
+    def test_row_csv_schema(self):
+        """benchmarks emit ``name,us_per_call,derived`` — the schema the
+        paper-figure sections and the sweep speedup row share."""
+        from benchmarks.common import Row
+
+        row = Row("fig5ab/fat-tree/W0", 12.5, "V1=263;shuffle=93")
+        name, us, derived = row.csv().split(",", 2)
+        assert name == "fig5ab/fat-tree/W0"
+        assert float(us) == pytest.approx(12.5)
+        assert derived.startswith("V1=")
+
+    def test_speedup_row_schema(self, small_system, arrivals):
+        from benchmarks.common import Row
+
+        sp = Row("fig5/sweep_speedup", 1.0,
+                 "grid=14;batched_s=1.0;sequential_s=1.2;speedup=1.20x")
+        assert len(sp.csv().split(",", 2)) == 3

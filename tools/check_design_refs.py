@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Docs-link check: every ``DESIGN.md §N`` reference in ``src/`` (and
+``benchmarks/``, ``examples/``) must match a ``§N`` section heading in
+DESIGN.md. Run from the repo root; exits non-zero on dangling references.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REF_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+HEADING_RE = re.compile(r"^#{1,6}\s+§(\d+)\b", re.MULTILINE)
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    design = root / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    sections = set(HEADING_RE.findall(design.read_text(encoding="utf-8")))
+    if not sections:
+        print("FAIL: DESIGN.md has no '§N' section headings")
+        return 1
+
+    bad = 0
+    checked = 0
+    for base in ("src", "benchmarks", "examples"):
+        for path in sorted((root / base).rglob("*.py")):
+            text = path.read_text(encoding="utf-8")
+            for m in REF_RE.finditer(text):
+                checked += 1
+                if m.group(1) not in sections:
+                    line = text[: m.start()].count("\n") + 1
+                    print(f"FAIL: {path.relative_to(root)}:{line} cites "
+                          f"DESIGN.md §{m.group(1)} but DESIGN.md has no such section")
+                    bad += 1
+    print(f"checked {checked} DESIGN.md references against sections "
+          f"{{{', '.join('§' + s for s in sorted(sections))}}}: "
+          f"{'OK' if not bad else f'{bad} dangling'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
