@@ -8,7 +8,6 @@ import time
 import numpy as np
 
 from repro.core import (
-    SimConfig,
     build_topology,
     container_costs,
     fat_tree,
@@ -21,8 +20,11 @@ from repro.core import (
 )
 
 QUICK = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
-T_SIM = 300 if QUICK else 1500
-T_COHORT = 300 if QUICK else 800
+# SMOKE: CI-sized grid — tiny T and fleet sizes so the whole driver finishes
+# in a couple of minutes on a shared runner (used by the ci.yml benchmarks job)
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+T_SIM = 40 if SMOKE else (300 if QUICK else 1500)
+T_COHORT = 40 if SMOKE else (300 if QUICK else 800)
 
 
 @dataclasses.dataclass

@@ -17,7 +17,8 @@ def main() -> None:
         ("fig5", paper_figures.fig5_backlog_and_cost_vs_v),
         ("fig6ab", paper_figures.fig6ab_predictors),
         ("fig6c", paper_figures.fig6c_misprediction_extremes),
-        ("scheduler_scale", systems_bench.scheduler_scale),
+        ("scheduler_scale", systems_bench.scheduler_fastpath),
+        ("scheduler_sweep", systems_bench.scheduler_scale),
         ("kernels", systems_bench.kernels_micro),
         ("moe_router", systems_bench.moe_router_bench),
         ("dispatcher", systems_bench.dispatcher_bench),

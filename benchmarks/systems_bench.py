@@ -14,12 +14,16 @@ from repro.core import (
     container_costs,
     fat_tree,
     feasible_rates,
+    instance_mesh,
+    make_problem,
     poisson_arrivals,
+    potus_schedule,
     run_sweep,
+    sharded_schedule,
 )
 from repro.core.topology import Component
 
-from .common import QUICK, Row, timer
+from .common import QUICK, SMOKE, Row, timer
 
 
 def _fleet(n_replicas: int, parallel_chains: int = 4):
@@ -36,6 +40,79 @@ def _fleet(n_replicas: int, parallel_chains: int = 4):
     return build_topology(apps, gamma=32.0)
 
 
+def _fleet_exact(I_target: int):
+    """Serving fleet with exactly ``I_target`` instances (64 per chain:
+    8 spouts -> 48 replicas -> 8 sinks), keeping the per-row candidate set
+    (max_succ = 48) flat as the fleet grows."""
+    chains = max(I_target // 64, 1)
+    apps = []
+    for a in range(chains):
+        apps.append([
+            Component("src", a, True, parallelism=8, successors=(1,)),
+            Component("serve", a, False, parallelism=48, proc_capacity=4.0, successors=(2,)),
+            Component("sink", a, False, parallelism=8, proc_capacity=8.0),
+        ])
+    return build_topology(apps, gamma=32.0)
+
+
+def scheduler_fastpath() -> list[Row]:
+    """Bare Algorithm-1 step at fleet scale (DESIGN.md §7): the sort-based
+    water-fill fast path vs the reference argmin loop vs the instance-sharded
+    path, as one jitted call per scheduling slot. The fused Pallas kernel is
+    timed at a small fleet only — off-TPU it runs in interpret mode, which
+    measures the interpreter, not the kernel."""
+    rows = []
+    # 256 stays in the full list so the Pallas-fused row (interpret-capped
+    # to small fleets) appears in real runs, not only under SMOKE
+    sizes = [128] if SMOKE else [256, 1024, 4096, 16384]
+    times: dict[tuple, float] = {}
+    for I_target in sizes:
+        topo = _fleet_exact(I_target)
+        I, C = topo.n_instances, topo.n_components
+        server_dist, _ = fat_tree(4)
+        net = container_costs(f"fleet{I}", server_dist, containers_per_server=8)
+        rng = np.random.default_rng(0)
+        placement = rng.integers(0, net.n_containers, I).astype(np.int32)
+        prob = make_problem(topo, net, placement)
+        succ_mask = topo.adj[topo.inst_comp]  # (I, C) — successor components
+        q_in = jnp.asarray(np.round(rng.uniform(0, 12, I)).astype(np.float32))
+        q_out = jnp.asarray(
+            (np.round(rng.uniform(0, 12, (I, C))) * succ_mask).astype(np.float32)
+        )
+        must = jnp.zeros((I, C), jnp.float32)
+        U = jnp.asarray(net.U)
+        mesh = instance_mesh(I)
+
+        paths: list[tuple[str, object]] = [
+            ("sort", lambda: potus_schedule(prob, U, q_in, q_out, must, 2.0, 1.0)),
+            ("loop", lambda: potus_schedule(prob, U, q_in, q_out, must, 2.0, 1.0,
+                                            method="loop")),
+            ("sharded", lambda: sharded_schedule(mesh, prob, U, q_in, q_out, must,
+                                                 2.0, 1.0)),
+        ]
+        if I <= 256:
+            paths.append(
+                ("pallas-fused-interp",
+                 lambda: potus_schedule(prob, U, q_in, q_out, must, 2.0, 1.0,
+                                        use_pallas=True))
+            )
+        for name, fn in paths:
+            jax.block_until_ready(fn())  # compile
+            n = 1 if I >= 16384 else 3
+            with timer() as t:
+                for _ in range(n):
+                    jax.block_until_ready(fn())
+            dt = t.dt / n
+            times[(name, I)] = dt
+            rows.append(Row(f"scheduler_scale/{name}/I{I}", dt * 1e6,
+                            f"instances={I};slots_per_s={1/dt:.2f}"))
+        sort_t, loop_t = times[("sort", I)], times[("loop", I)]
+        rows.append(Row(f"scheduler_scale/speedup/I{I}", sort_t * 1e6,
+                        f"sort_us={sort_t*1e6:.0f};loop_us={loop_t*1e6:.0f};"
+                        f"speedup={loop_t/sort_t:.1f}x"))
+    return rows
+
+
 def scheduler_scale() -> list[Row]:
     """End-to-end scheduling throughput vs fleet size (jit XLA path vs
     Pallas price), measured through the batched sweep engine: a V-grid of
@@ -45,7 +122,7 @@ def scheduler_scale() -> list[Row]:
     small fleets that overhead is a visible fraction of the decision cost;
     at large fleets the scheduler compute dominates."""
     rows = []
-    sizes = [8, 32, 128] if QUICK else [8, 32, 128, 256, 512]
+    sizes = [8] if SMOKE else ([8, 32, 128] if QUICK else [8, 32, 128, 256, 512])
     for n in sizes:
         topo = _fleet(n)
         I = topo.n_instances

@@ -14,7 +14,6 @@ from repro.core import (
     Component,
     SimConfig,
     build_topology,
-    container_costs,
     run_cohort_sim,
 )
 from repro.core.network import NetworkCosts

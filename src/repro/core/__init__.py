@@ -5,17 +5,18 @@ Layers: DAG/topology model, placement, network costs, queue dynamics
 and two simulation engines (scan-based JAX engine; per-cohort response-time
 engine).
 """
-from .topology import Component, Topology, build_topology, random_apps, linear_app, diamond_app
-from .network import NetworkCosts, jellyfish, fat_tree, container_costs
-from .placement import t_heron_placement, instance_traffic
-from .potus import SchedProblem, make_problem, potus_prices, potus_schedule
-from .baselines import shuffle_schedule, jsq_schedule
-from .queues import SimState, init_state, init_state_batch, effective_qout, slot_update
-from .simulator import SimConfig, SimResult, run_sim, sim_step
-from .cohort import CohortResult, run_cohort_sim
-from .sweep import Scenario, SweepSpec, SweepResult, run_sweep
-from .workload import poisson_arrivals, trace_synthetic, feasible_rates, spout_rate_matrix
 from . import prediction
+from .baselines import jsq_schedule, shuffle_schedule
+from .cohort import CohortResult, run_cohort_sim
+from .network import NetworkCosts, container_costs, fat_tree, jellyfish
+from .placement import instance_traffic, t_heron_placement
+from .potus import SchedProblem, make_problem, potus_prices, potus_schedule
+from .queues import SimState, effective_qout, init_state, init_state_batch, slot_update
+from .sharded import instance_mesh, run_sim_sharded, sharded_schedule
+from .simulator import SimConfig, SimResult, run_sim, sim_step
+from .sweep import Scenario, SweepResult, SweepSpec, run_sweep
+from .topology import Component, Topology, build_topology, diamond_app, linear_app, random_apps
+from .workload import feasible_rates, poisson_arrivals, spout_rate_matrix, trace_synthetic
 
 __all__ = [
     "Component", "Topology", "build_topology", "random_apps", "linear_app", "diamond_app",
@@ -25,6 +26,7 @@ __all__ = [
     "shuffle_schedule", "jsq_schedule",
     "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
     "SimConfig", "SimResult", "run_sim", "sim_step",
+    "instance_mesh", "run_sim_sharded", "sharded_schedule",
     "CohortResult", "run_cohort_sim",
     "Scenario", "SweepSpec", "SweepResult", "run_sweep",
     "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",

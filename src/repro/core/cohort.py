@@ -34,7 +34,7 @@ from collections import defaultdict, deque
 import numpy as np
 
 from .network import NetworkCosts
-from .potus import make_problem, potus_schedule
+from .potus import make_problem
 from .simulator import SimConfig, _get_scheduler
 from .topology import Topology
 

@@ -12,10 +12,21 @@ budget of the target component. Actual same-slot arrivals at spouts
 (``Q_rem(t, 0)``) are *always* dispatched (eq. 4 / Alg. 1 line 5-6), evenly
 across the successor component's instances if the candidate set is empty.
 
-Everything is vectorized: the price matrix is one fused broadcast, the greedy
-water-fill is a ``lax.fori_loop`` over at most ``max_succ`` picks, ``vmap``-ed
-over source instances. The price matrix also has a Pallas TPU kernel
-(`repro.kernels.potus_price`) used when ``use_pallas=True``.
+Two interchangeable implementations of the greedy (DESIGN.md §7):
+
+* ``method="sort"`` (default) — the **sort-based water-fill fast path**. Each
+  row's finite negative prices are reduced to one entry per successor
+  component (its cheapest candidate), sorted ascending, and the transmission
+  budget ``gamma_i`` is water-filled against the cumulative per-component
+  ``q_out`` budgets with a prefix sum — no sequential argmin loop.
+* ``method="loop"`` — the original ``lax.fori_loop`` of argmin picks, kept as
+  the executable reference; the two agree elementwise (tested against each
+  other and against the ``core.reference`` integer oracle).
+
+The price matrix has a Pallas TPU kernel (`repro.kernels.potus_price`), and
+``use_pallas=True`` routes the whole per-row allocation through the fused
+schedule kernel (`repro.kernels.potus_schedule`), in which prices never
+round-trip to HBM (DESIGN.md §7).
 
 The scheduler is *fluid* (float tuple counts). On integral inputs the greedy
 allocations stay integral except for the even-split mandatory dispatch; the
@@ -67,6 +78,21 @@ def make_problem(topo: Topology, net: NetworkCosts, inst_container: np.ndarray) 
     )
 
 
+def _price_rows(
+    u_pair: jax.Array,  # (R, I) = U[k(i), k(j)] for a block of source rows
+    q_in_cols: jax.Array,  # (I,)
+    q_out_rows: jax.Array,  # (R, C)
+    inst_comp_cols: jax.Array,  # (I,)
+    edge_mask_rows: jax.Array,  # (R, I)
+    V,
+    beta,
+) -> jax.Array:
+    """Price block ``l`` (eq. 16) for a block of source rows; +inf off-edge.
+    Shared by the dense path and the sharded row-block path."""
+    l = V * u_pair + q_in_cols[None, :] - beta * q_out_rows[:, inst_comp_cols]
+    return jnp.where(edge_mask_rows, l, _INF)
+
+
 def potus_prices(
     prob: SchedProblem,
     U: jax.Array,  # (K, K)
@@ -84,11 +110,7 @@ def potus_prices(
             U, q_in, q_out, prob.inst_container, prob.inst_comp, prob.edge_mask, V, beta
         )
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]  # (I, I)
-    qout_pair = jnp.take_along_axis(
-        q_out, prob.inst_comp[None, :].repeat(q_out.shape[0], axis=0), axis=1
-    )  # q_out[i, comp(i')]
-    l = V * u_pair + q_in[None, :] - beta * qout_pair
-    return jnp.where(prob.edge_mask, l, _INF)
+    return _price_rows(u_pair, q_in, q_out, prob.inst_comp, prob.edge_mask, V, beta)
 
 
 def _greedy_row(
@@ -98,7 +120,7 @@ def _greedy_row(
     inst_comp: jax.Array,  # (I,)
     max_succ: int,
 ):
-    """Algorithm 1 lines 9-14 for one source instance."""
+    """Algorithm 1 lines 9-14 for one source instance (reference loop path)."""
     I = l_row.shape[0]
 
     def body(_, carry):
@@ -120,7 +142,87 @@ def _greedy_row(
     return x_row, budget, used
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
+def _waterfill_row(
+    l_row: jax.Array,  # (I,)
+    qout_row: jax.Array,  # (C,) output-queue budget of source i
+    gamma_i: jax.Array,  # ()
+    inst_comp: jax.Array,  # (I,)
+    n_components: int,
+):
+    """Sort-based water-fill: the same allocation as ``_greedy_row`` without
+    the sequential argmin loop (DESIGN.md §7).
+
+    Each greedy pick either drains its target component's whole ``q_out``
+    budget (so later candidates of that component receive 0) or exhausts
+    ``gamma_i`` (so *everything* later receives 0). Only the **cheapest
+    candidate of each component** can therefore receive tuples, and the row
+    collapses to one (price, target, budget) entry per successor component.
+    Sorting those entries by ascending price — index tie-break matching
+    ``argmin`` — and water-filling ``gamma_i`` against the cumulative budget
+    prefix sum reproduces the loop's allocation exactly.
+    """
+    I = l_row.shape[0]
+    C = n_components
+    key = jnp.where(l_row < 0.0, l_row, _INF)  # finite negatives; non-edges are +inf
+    # cheapest candidate per component, ties to the lowest instance index
+    m = jnp.full((C,), _INF, key.dtype).at[inst_comp].min(key)
+    idx = jnp.where(key == m[inst_comp], jnp.arange(I, dtype=jnp.int32), I)
+    j_c = jnp.full((C,), I, jnp.int32).at[inst_comp].min(idx)
+    budget = jnp.where(m < 0.0, jnp.maximum(qout_row, 0.0), 0.0)
+    # ascending (price, index); componentless entries carry zero budget
+    _, j_sorted, b_sorted = jax.lax.sort((m, j_c, budget), num_keys=2)
+    prefix = jnp.cumsum(b_sorted)
+    before = jnp.concatenate([jnp.zeros((1,), prefix.dtype), prefix[:-1]])
+    fill = jnp.minimum(prefix, gamma_i) - jnp.minimum(before, gamma_i)
+    return jnp.zeros((I,), l_row.dtype).at[j_sorted].add(fill, mode="drop")
+
+
+def _allocate_rows(
+    l: jax.Array,  # (R, I) prices, +inf on non-candidates' edges
+    q_out: jax.Array,  # (R, C)
+    gamma: jax.Array,  # (R,)
+    inst_comp: jax.Array,  # (I,) component of each *column*
+    n_components: int,
+    max_succ: int,
+    method: str,
+) -> jax.Array:
+    """Greedy allocation for a block of rows; shared by the dense and the
+    sharded (row-block) execution paths."""
+    if method == "sort":
+        return jax.vmap(_waterfill_row, in_axes=(0, 0, 0, None, None))(
+            l, q_out, gamma, inst_comp, n_components
+        )
+    if method == "loop":
+        x, _, _ = jax.vmap(_greedy_row, in_axes=(0, 0, 0, None, None))(
+            l, q_out, gamma, inst_comp, max_succ
+        )
+        return x
+    raise ValueError(f"unknown method {method!r} (expected 'sort' or 'loop')")
+
+
+def _mandatory_dispatch(
+    x: jax.Array,  # (R, I) greedy allocation for a block of rows
+    must_send: jax.Array,  # (R, C) — spout Q_rem(t, 0); zeros elsewhere
+    edge_mask: jax.Array,  # (R, I)
+    inst_comp: jax.Array,  # (I,) component of each column
+    comp_count: jax.Array,  # (C,)
+    n_components: int,
+) -> jax.Array:
+    """Mandatory dispatch of actual arrivals (eq. 4, Alg. 1 line 5-6):
+    any shortfall vs the greedy shipment is split evenly across the successor
+    component's instances."""
+    comp_onehot = jax.nn.one_hot(inst_comp, n_components, dtype=x.dtype)  # (I, C)
+    shipped = x @ comp_onehot  # (R, C)
+    shortfall = jnp.maximum(must_send - shipped, 0.0)  # (R, C)
+    extra = jnp.where(
+        edge_mask,
+        shortfall[:, inst_comp] / comp_count[inst_comp][None, :],
+        0.0,
+    )
+    return x + extra
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "method"))
 def potus_schedule(
     prob: SchedProblem,
     U: jax.Array,  # (K, K) per-slot container costs
@@ -130,25 +232,27 @@ def potus_schedule(
     V: float,
     beta: float,
     use_pallas: bool = False,
+    method: str = "sort",
 ) -> jax.Array:
-    """One slot of Algorithm 1 for every instance. Returns X (I, I)."""
-    I = q_in.shape[0]
-    l = potus_prices(prob, U, q_in, q_out, V, beta, use_pallas=use_pallas)
+    """One slot of Algorithm 1 for every instance. Returns X (I, I).
 
-    x, _, _ = jax.vmap(_greedy_row, in_axes=(0, 0, 0, None, None))(
-        l, q_out, prob.gamma, prob.inst_comp, prob.max_succ
-    )
+    ``method="sort"`` is the water-fill fast path, ``"loop"`` the reference
+    argmin loop; with ``use_pallas=True`` the sort path runs the fused
+    Pallas schedule kernel (prices and allocation in one kernel), while the
+    loop path keeps using the standalone Pallas price kernel.
+    """
+    if use_pallas and method == "sort":
+        from repro.kernels import ops as kops
 
-    # --- mandatory dispatch of actual arrivals (eq. 4, Alg. 1 line 5-6) ----
-    # shipped[i, c] = sum of x over instances of component c
-    comp_onehot = jax.nn.one_hot(prob.inst_comp, prob.n_components, dtype=x.dtype)  # (I, C)
-    shipped = x @ comp_onehot  # (I, C)
-    shortfall = jnp.maximum(must_send - shipped, 0.0)  # (I, C)
-    # even split over successor instances: x[i, j] += shortfall[i, comp(j)] / |I_C(comp(j))|
-    extra = jnp.where(
-        prob.edge_mask,
-        jnp.take_along_axis(shortfall, prob.inst_comp[None, :].repeat(I, axis=0), axis=1)
-        / prob.comp_count[prob.inst_comp][None, :],
-        0.0,
+        x = kops.potus_schedule_alloc(
+            U, q_in, q_out, prob.inst_container, prob.inst_comp, prob.edge_mask,
+            prob.gamma, V, beta,
+        )
+    else:
+        l = potus_prices(prob, U, q_in, q_out, V, beta, use_pallas=use_pallas)
+        x = _allocate_rows(
+            l, q_out, prob.gamma, prob.inst_comp, prob.n_components, prob.max_succ, method
+        )
+    return _mandatory_dispatch(
+        x, must_send, prob.edge_mask, prob.inst_comp, prob.comp_count, prob.n_components
     )
-    return x + extra

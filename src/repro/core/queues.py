@@ -22,7 +22,10 @@ import numpy as np
 from .potus import SchedProblem
 from .topology import Topology
 
-__all__ = ["SimState", "init_state", "init_state_batch", "effective_qout", "slot_update"]
+__all__ = [
+    "SimState", "init_state", "init_state_batch", "effective_qout",
+    "slot_update", "slot_update_rows",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -65,6 +68,49 @@ def effective_qout(prob: SchedProblem, state: SimState) -> jax.Array:
     return jnp.where(prob.is_spout[:, None], spout_qout, state.q_out_bolt)
 
 
+def slot_update_rows(
+    state: SimState,  # leaves over a block of R rows
+    X: jax.Array,  # (R, I) decision rows for this slot
+    landing: jax.Array,  # (R,) tuples landing at these rows' instances (full column sums)
+    new_arrivals: jax.Array,  # (R, C) — λ(t + W + 1), entering the window
+    mu: jax.Array,  # (R,) processing capacity this slot
+    selectivity_rows: jax.Array,  # (R, C) — selectivity[comp(i), :]
+    is_spout: jax.Array,  # (R,)
+    comp_onehot: jax.Array,  # (I, C) — one-hot component of each *column*
+) -> tuple[SimState, dict[str, jax.Array]]:
+    """Per-slot dynamics for a block of rows (paper eqs. (2)-(10)).
+
+    Row-local except for ``landing``: the tuples arriving at each row's
+    instance are column sums of the *global* decision matrix, which the dense
+    path computes directly and the sharded path reduces with a ``psum``
+    across row shards (DESIGN.md §7).
+    """
+    shipped = X @ comp_onehot  # (R, C) tuples leaving i toward component c
+
+    # --- spouts: drain Q_rem in ascending w (actual first), shift window ----
+    cum_before = jnp.cumsum(state.q_rem, axis=-1) - state.q_rem
+    drained = jnp.clip(shipped[:, :, None] - cum_before, 0.0, state.q_rem)
+    q_rem = state.q_rem - drained
+    q_rem = jnp.concatenate([q_rem[..., 1:], new_arrivals[..., None]], axis=-1)
+    q_rem = q_rem * is_spout[:, None, None]
+
+    # --- bolts: arrivals from X(t-1), service, emission --------------------
+    is_bolt = ~is_spout
+    total_in = state.q_in + state.transit
+    served = jnp.minimum(total_in, mu) * is_bolt
+    q_in = (total_in - served) * is_bolt  # eq. (8)
+    nu = served[:, None] * selectivity_rows  # (R, C) eq. (9) input
+    q_out_bolt = (
+        jnp.maximum(state.q_out_bolt - shipped, 0.0) + nu
+    ) * is_bolt[:, None]
+
+    transit = landing * is_bolt  # everything ships into bolt inputs
+
+    new_state = SimState(q_in=q_in, q_rem=q_rem, q_out_bolt=q_out_bolt, transit=transit)
+    info = dict(shipped=shipped, served=served, drained=drained)
+    return new_state, info
+
+
 def slot_update(
     prob: SchedProblem,
     state: SimState,
@@ -74,27 +120,7 @@ def slot_update(
     selectivity_rows: jax.Array,  # (I, C) — selectivity[comp(i), :]
 ) -> tuple[SimState, dict[str, jax.Array]]:
     comp_onehot = jax.nn.one_hot(prob.inst_comp, prob.n_components, dtype=X.dtype)
-    shipped = X @ comp_onehot  # (I, C) tuples leaving i toward component c
-
-    # --- spouts: drain Q_rem in ascending w (actual first), shift window ----
-    cum_before = jnp.cumsum(state.q_rem, axis=-1) - state.q_rem
-    drained = jnp.clip(shipped[:, :, None] - cum_before, 0.0, state.q_rem)
-    q_rem = state.q_rem - drained
-    q_rem = jnp.concatenate([q_rem[..., 1:], new_arrivals[..., None]], axis=-1)
-    q_rem = q_rem * prob.is_spout[:, None, None]
-
-    # --- bolts: arrivals from X(t-1), service, emission --------------------
-    is_bolt = ~prob.is_spout
-    total_in = state.q_in + state.transit
-    served = jnp.minimum(total_in, mu) * is_bolt
-    q_in = (total_in - served) * is_bolt  # eq. (8)
-    nu = served[:, None] * selectivity_rows  # (I, C) eq. (9) input
-    q_out_bolt = (
-        jnp.maximum(state.q_out_bolt - shipped, 0.0) + nu
-    ) * is_bolt[:, None]
-
-    transit = X.sum(axis=0) * is_bolt  # everything ships into bolt inputs
-
-    new_state = SimState(q_in=q_in, q_rem=q_rem, q_out_bolt=q_out_bolt, transit=transit)
-    info = dict(shipped=shipped, served=served, drained=drained)
-    return new_state, info
+    return slot_update_rows(
+        state, X, X.sum(axis=0), new_arrivals, mu, selectivity_rows,
+        prob.is_spout, comp_onehot,
+    )

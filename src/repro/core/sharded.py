@@ -1,0 +1,229 @@
+"""Instance-sharded execution path (DESIGN.md §7).
+
+The paper's point is that dispatch decisions are made *distributedly* at
+each instance; this module realizes that in the engine itself. Rows of the
+decision matrix — one per source instance — are independent given the global
+``q_in`` vector, so the scheduler and the per-slot dynamics shard cleanly
+over an instance-partitioned 1-D device mesh via ``shard_map``:
+
+* each device owns a contiguous block of instances: its rows of
+  ``edge_mask``/``X``, its slice of every queue in :class:`SimState`;
+* the price block needs the full ``q_in`` (one ``all_gather`` of I floats
+  per slot) while ``U`` and the column metadata (``inst_comp``,
+  ``inst_container``) are replicated — O(I) communication per slot against
+  the O(I²/D) local price/allocation work;
+* tuples landing at an instance are column sums of the global decision
+  matrix: each shard reduces its rows' contribution with a ``psum`` and
+  slices out its own columns.
+
+With D devices the per-device memory for the (I × I) price / decision
+matrices drops to I²/D, which is what lets ``potus_schedule`` and
+``sim_step`` scale past single-device HBM. On one device the path is the
+identity sharding and agrees elementwise with `core.simulator.run_sim`
+(tested). ``SimConfig(sharded=True)`` / ``SweepSpec(sharded=True)`` route
+through here; meshes come from the largest instance-count divisor of the
+available device count (`instance_mesh`).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.context import shard_map_compat
+
+from .network import NetworkCosts
+from .potus import SchedProblem, _allocate_rows, _mandatory_dispatch, _price_rows, make_problem
+from .queues import SimState, effective_qout, init_state, slot_update_rows
+from .topology import Topology
+
+__all__ = ["instance_mesh", "sharded_schedule", "run_sim_sharded"]
+
+_AXIS = "i"
+
+
+def instance_mesh(n_instances: int, devices=None) -> Mesh:
+    """1-D mesh over the largest device-count prefix that divides ``I``."""
+    devices = list(jax.devices() if devices is None else devices)
+    n = len(devices)
+    while n > 1 and n_instances % n != 0:
+        n -= 1
+    return Mesh(np.array(devices[:n]), (_AXIS,))
+
+
+def _prob_specs(prob: SchedProblem) -> SchedProblem:
+    """shard_map specs for the problem pytree: rows sharded, columns full."""
+    return SchedProblem(
+        edge_mask=P(_AXIS, None),
+        inst_comp=P(None),  # replicated — needed for every *column*
+        inst_container=P(None),
+        gamma=P(_AXIS),
+        comp_count=P(None),
+        is_spout=P(_AXIS),
+        max_succ=prob.max_succ,
+        n_components=prob.n_components,
+    )
+
+
+_STATE_SPECS = SimState(
+    q_in=P(_AXIS), q_rem=P(_AXIS, None, None), q_out_bolt=P(_AXIS, None), transit=P(_AXIS)
+)
+
+
+def _local_rows(full: jax.Array, n_local: int) -> jax.Array:
+    """This shard's slice of a replicated per-instance vector."""
+    start = jax.lax.axis_index(_AXIS) * n_local
+    return jax.lax.dynamic_slice_in_dim(full, start, n_local)
+
+
+def _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method):
+    """Algorithm 1 for this shard's rows; returns X rows (I_loc, I)."""
+    n_local = q_out.shape[0]
+    kc_rows = _local_rows(prob.inst_container, n_local)
+    u_pair = U[kc_rows[:, None], prob.inst_container[None, :]]  # (I_loc, I)
+    l = _price_rows(u_pair, q_in_full, q_out, prob.inst_comp, prob.edge_mask, V, beta)
+    x = _allocate_rows(
+        l, q_out, prob.gamma, prob.inst_comp, prob.n_components, prob.max_succ, method
+    )
+    x = _mandatory_dispatch(
+        x, must_send, prob.edge_mask, prob.inst_comp, prob.comp_count, prob.n_components
+    )
+    return x, u_pair
+
+
+@partial(jax.jit, static_argnames=("mesh", "method"))
+def sharded_schedule(
+    mesh: Mesh,
+    prob: SchedProblem,
+    U: jax.Array,  # (K, K)
+    q_in: jax.Array,  # (I,)
+    q_out: jax.Array,  # (I, C)
+    must_send: jax.Array,  # (I, C)
+    V: float,
+    beta: float,
+    method: str = "sort",
+) -> jax.Array:
+    """One slot of Algorithm 1, row-sharded over ``mesh``. Returns X (I, I),
+    sharded along its first axis."""
+
+    def local(prob, U, q_in, q_out, must_send):
+        q_in_full = jax.lax.all_gather(q_in, _AXIS, tiled=True)
+        x, _ = _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method)
+        return x
+
+    return shard_map_compat(
+        local,
+        mesh=mesh,
+        in_specs=(_prob_specs(prob), P(None, None), P(_AXIS), P(_AXIS, None), P(_AXIS, None)),
+        out_specs=P(_AXIS, None),
+    )(prob, U, q_in, q_out, must_send)
+
+
+def _local_sim_step(prob, U, mu, selectivity_rows, V, beta, state, new_arr, method):
+    """One slot of the §3 dynamics on this shard's rows (cf. ``sim_step``)."""
+    q_in_full = jax.lax.all_gather(state.q_in, _AXIS, tiled=True)
+    q_out = effective_qout(prob, state)  # all inputs row-local: works per shard
+    must_send = state.q_rem[:, :, 0]
+    x, u_pair = _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method)
+
+    h = jax.lax.psum(state.q_in.sum() + beta * q_out.sum(), _AXIS)  # h(t), eq. (12)
+    cost = jax.lax.psum((x * u_pair).sum(), _AXIS)  # Theta(t), eq. (11)
+
+    col_sums = jax.lax.psum(x.sum(axis=0), _AXIS)  # (I,) tuples landing everywhere
+    landing = _local_rows(col_sums, state.q_in.shape[0])
+    comp_onehot = jax.nn.one_hot(prob.inst_comp, prob.n_components, dtype=x.dtype)
+    new_state, info = slot_update_rows(
+        state, x, landing, new_arr, mu, selectivity_rows, prob.is_spout, comp_onehot
+    )
+    metrics = (
+        h,
+        cost,
+        jax.lax.psum(state.q_in.sum(), _AXIS),
+        jax.lax.psum(q_out.sum(), _AXIS),
+        jax.lax.psum(info["served"].sum(), _AXIS),
+    )
+    return new_state, metrics
+
+
+@partial(jax.jit, static_argnames=("mesh", "method"))
+def _scan_sim_sharded(
+    mesh: Mesh,
+    prob: SchedProblem,
+    state0: SimState,
+    arrivals: jax.Array,  # (T, I, C)
+    U: jax.Array,
+    mu: jax.Array,
+    selectivity_rows: jax.Array,
+    V: float,
+    beta: float,
+    method: str = "sort",
+):
+    step = shard_map_compat(
+        partial(_local_sim_step, method=method),
+        mesh=mesh,
+        in_specs=(
+            _prob_specs(prob), P(None, None), P(_AXIS), P(_AXIS, None), P(), P(),
+            _STATE_SPECS, P(_AXIS, None),
+        ),
+        out_specs=(_STATE_SPECS, (P(), P(), P(), P(), P())),
+    )
+
+    def body(state, new_arr):
+        return step(prob, U, mu, selectivity_rows, V, beta, state, new_arr)
+
+    final, (h, cost, qi, qo, served) = jax.lax.scan(body, state0, arrivals)
+    return final, h, cost, qi, qo, served
+
+
+def run_sim_sharded(
+    topo: Topology,
+    net: NetworkCosts,
+    inst_container: np.ndarray,
+    arrivals: np.ndarray,  # (T + window + 1, I, C)
+    T: int,
+    cfg,  # SimConfig
+    mu: np.ndarray | None = None,
+    mesh: Mesh | None = None,
+):
+    """`run_sim` semantics on an instance-partitioned mesh (DESIGN.md §7)."""
+    from .simulator import SimResult, pad_arrivals  # local import: avoid cycle
+
+    W = cfg.window
+    arrivals = pad_arrivals(arrivals, T + W + 1)
+    prob = make_problem(topo, net, inst_container)
+    mesh = mesh if mesh is not None else instance_mesh(topo.n_instances)
+    if topo.n_instances % mesh.shape[_AXIS] != 0:
+        raise ValueError(
+            f"mesh size {mesh.shape[_AXIS]} does not divide I={topo.n_instances}"
+        )
+
+    from repro.distributed.sharding import named  # model-layer helper, reused
+
+    state0 = jax.device_put(
+        init_state(topo, W, arrivals[: W + 1]), named(mesh, _STATE_SPECS)
+    )
+    window_stream = jax.device_put(
+        jnp.asarray(arrivals[W + 1 : T + W + 1], jnp.float32),
+        named(mesh, P(None, _AXIS, None)),
+    )
+    mu_arr = jnp.asarray(mu if mu is not None else topo.inst_mu, jnp.float32)
+    sel_rows = jnp.asarray(topo.selectivity[topo.inst_comp], jnp.float32)
+
+    method = "loop" if cfg.scheduler == "potus-loop" else "sort"
+    if cfg.scheduler not in ("potus", "potus-loop"):
+        raise ValueError(f"sharded engine only runs POTUS, got {cfg.scheduler!r}")
+    final, h, cost, qi, qo, served = _scan_sim_sharded(
+        mesh, prob, state0, window_stream, jnp.asarray(net.U), mu_arr, sel_rows,
+        float(cfg.V), float(cfg.beta), method=method,
+    )
+    return SimResult(
+        backlog=np.asarray(h),
+        comm_cost=np.asarray(cost),
+        q_in_total=np.asarray(qi),
+        q_out_total=np.asarray(qo),
+        served_total=np.asarray(served),
+        final_state=jax.device_get(final),
+    )

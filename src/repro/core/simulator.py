@@ -24,6 +24,7 @@ import numpy as np
 from .network import NetworkCosts
 from .potus import SchedProblem, make_problem, potus_schedule
 from .queues import SimState, effective_qout, init_state, slot_update
+from .sharded import run_sim_sharded
 from .topology import Topology
 
 __all__ = ["SimResult", "run_sim", "SimConfig", "sim_step", "pad_arrivals"]
@@ -43,8 +44,9 @@ class SimConfig:
     V: float = 3.0
     beta: float = 1.0
     window: int = 0
-    scheduler: str = "potus"  # potus | shuffle | jsq
+    scheduler: str = "potus"  # potus | potus-loop | shuffle | jsq
     use_pallas: bool = False
+    sharded: bool = False  # instance-sharded engine (core.sharded, DESIGN.md §7)
 
 
 @dataclasses.dataclass
@@ -70,6 +72,8 @@ def _get_scheduler(name: str, use_pallas: bool = False) -> Callable:
         if use_pallas:
             return partial(potus_schedule, use_pallas=True)
         return potus_schedule
+    if name == "potus-loop":  # reference argmin-loop path (DESIGN.md §7)
+        return partial(potus_schedule, use_pallas=use_pallas, method="loop")
     if name == "shuffle":
         from .baselines import shuffle_schedule
 
@@ -140,6 +144,10 @@ def run_sim(
     cfg: SimConfig,
     mu: np.ndarray | None = None,
 ) -> SimResult:
+    if cfg.sharded:
+        if cfg.use_pallas:
+            raise ValueError("sharded engine has no Pallas path yet (use one or the other)")
+        return run_sim_sharded(topo, net, inst_container, arrivals, T, cfg, mu=mu)
     W = cfg.window
     arrivals = pad_arrivals(arrivals, T + W + 1)
     prob = make_problem(topo, net, inst_container)

@@ -36,7 +36,7 @@ import numpy as np
 from .network import NetworkCosts
 from .potus import make_problem
 from .queues import init_state, init_state_batch
-from .simulator import SimConfig, SimResult, _get_scheduler, pad_arrivals, sim_step
+from .simulator import SimConfig, SimResult, _get_scheduler, pad_arrivals, run_sim, sim_step
 from .topology import Topology
 
 __all__ = ["Scenario", "SweepSpec", "SweepResult", "run_sweep"]
@@ -53,6 +53,7 @@ class Scenario:
     scheduler: str
     arrival: str
     use_pallas: bool = False
+    sharded: bool = False
 
     def config(self) -> SimConfig:
         return SimConfig(
@@ -61,6 +62,7 @@ class Scenario:
             window=self.window,
             scheduler=self.scheduler,
             use_pallas=self.use_pallas,
+            sharded=self.sharded,
         )
 
     def matches(self, **axes: Any) -> bool:
@@ -90,16 +92,18 @@ class SweepSpec:
     scheduler: tuple = ("potus",)
     arrival: tuple = ("default",)
     use_pallas: bool = False
+    sharded: bool = False
 
     def __post_init__(self):
         for axis in ("V", "beta", "window", "scheduler", "arrival"):
             object.__setattr__(self, axis, _as_tuple(getattr(self, axis)))
-        if not isinstance(self.use_pallas, bool):
-            # not an axis: a truthy tuple would silently Pallas-route everything
-            raise TypeError(
-                "use_pallas is a single flag, not a sweep axis; run separate "
-                f"sweeps per backend (got {self.use_pallas!r})"
-            )
+        for flag in ("use_pallas", "sharded"):
+            if not isinstance(getattr(self, flag), bool):
+                # not an axis: a truthy tuple would silently re-route everything
+                raise TypeError(
+                    f"{flag} is a single flag, not a sweep axis; run separate "
+                    f"sweeps per backend (got {getattr(self, flag)!r})"
+                )
 
     @property
     def n_scenarios(self) -> int:
@@ -111,7 +115,8 @@ class SweepSpec:
     def scenarios(self) -> list[Scenario]:
         """Grid order: arrival, scheduler, window, beta outermost; V innermost."""
         return [
-            Scenario(idx, float(V), float(beta), int(W), sched, arr, self.use_pallas)
+            Scenario(idx, float(V), float(beta), int(W), sched, arr,
+                     self.use_pallas, self.sharded)
             for idx, (arr, sched, W, beta, V) in enumerate(
                 itertools.product(self.arrival, self.scheduler, self.window, self.beta, self.V)
             )
@@ -231,6 +236,16 @@ def run_sweep(
             "only the cohort engine models — pass engine='cohort' (the JAX engine "
             "treats its single stream as the predicted/actual arrivals combined)"
         )
+    if spec.sharded:
+        # shard_map partitions the instance axis across devices; scenarios are
+        # not additionally vmapped (the sharded path targets single big-I
+        # scenarios, not wide grids) — run the grid sequentially (DESIGN.md §7)
+        results = [
+            run_sim(topo, net, inst_container, arr_map[scn.arrival][0], T,
+                    scn.config(), mu=mu)
+            for scn in scenarios
+        ]
+        return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
 
     prob = make_problem(topo, net, inst_container)
     mu_arr = jnp.asarray(mu if mu is not None else topo.inst_mu, jnp.float32)

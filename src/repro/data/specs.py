@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.models.common import DTYPES
 from repro.models import model_zoo
+from repro.models.common import DTYPES
 
 __all__ = ["input_specs", "make_batch", "decode_cache_specs"]
 

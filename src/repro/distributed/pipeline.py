@@ -15,12 +15,13 @@ the sequential stack in ``tests/test_pipeline.py``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import shard_map_compat
 
 __all__ = ["pipeline_apply"]
 
@@ -76,11 +77,10 @@ def pipeline_apply(
         return outs
 
     stage_dim_spec = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(stage_dim_spec, P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(stage_params, x)

@@ -14,9 +14,13 @@ import jax.numpy as jnp
 from .decode_attention import decode_attention_call
 from .flash_attention import flash_attention_call
 from .potus_price import potus_price_call
+from .potus_schedule import potus_schedule_call
 from .ssd_scan import ssd_intra_chunk_call
 
-__all__ = ["flash_attention", "decode_attention", "ssd_intra_chunk", "potus_price"]
+__all__ = [
+    "flash_attention", "decode_attention", "ssd_intra_chunk", "potus_price",
+    "potus_schedule_alloc",
+]
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
@@ -42,5 +46,14 @@ def ssd_intra_chunk(xc, dtc, dA_cum, Bc, Cc):
 def potus_price(U, q_in, q_out, inst_container, inst_comp, edge_mask, V, beta):
     return potus_price_call(
         U, q_in, q_out, inst_container, inst_comp, edge_mask, V, beta,
+        interpret=_INTERPRET,
+    )
+
+
+def potus_schedule_alloc(U, q_in, q_out, inst_container, inst_comp, edge_mask, gamma, V, beta):
+    """Fused price + water-fill allocation (DESIGN.md §7); returns X (I, I)
+    before the mandatory dispatch of actual arrivals."""
+    return potus_schedule_call(
+        U, q_in, q_out, inst_container, inst_comp, edge_mask, gamma, V, beta,
         interpret=_INTERPRET,
     )

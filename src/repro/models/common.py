@@ -13,8 +13,6 @@ Attention has three execution paths:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,11 +15,9 @@ indexed KV cache.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .common import (
     DTYPES,

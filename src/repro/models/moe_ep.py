@@ -30,7 +30,9 @@ import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
-from .moe import mlp, moe_capacity
+from repro.distributed.context import shard_map_compat
+
+from .moe import moe_capacity
 
 __all__ = ["moe_ffn_ep"]
 
@@ -174,8 +176,8 @@ def moe_ffn_ep(p, x, cfg, mesh, router_state=None):
         P(None),  # router_state
     )
     out_specs = (token_spec, P(), P(), P(), P())
-    fn = jax.shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    fn = shard_map_compat(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )
     y, aux_loss, dropped, load, new_rs = fn(
         xf, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared, router_state

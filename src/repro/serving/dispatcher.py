@@ -18,9 +18,9 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.network import NetworkCosts
 from repro.core.potus import make_problem, potus_schedule
 from repro.core.topology import Component, build_topology
-from repro.core.network import NetworkCosts
 
 __all__ = ["DispatcherConfig", "PotusDispatcher"]
 

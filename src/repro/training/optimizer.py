@@ -8,7 +8,6 @@ the full device mesh (ZeRO-1) via their PartitionSpecs — see
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ serves 1 device and 512.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

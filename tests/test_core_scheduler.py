@@ -4,9 +4,8 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[test])")
-from hypothesis import given, settings, strategies as st
-
 import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
 
 from repro.core import make_problem, potus_prices, potus_schedule
 from repro.core.reference import (

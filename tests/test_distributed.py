@@ -21,6 +21,7 @@ def _run(code: str) -> dict:
         capture_output=True,
         text=True,
         env={"PYTHONPATH": SRC, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": "cpu",  # skip the ~7-min TPU-init probe on TPU-lib images
              "PATH": "/usr/bin:/bin"},
         cwd=".",
         timeout=900,

@@ -1,0 +1,234 @@
+"""Sort-based water-fill fast path (DESIGN.md §7): elementwise agreement of
+``method="sort"`` vs the reference argmin loop vs the exact python oracle, on
+paper-profile systems, randomized DAG topologies, and adversarial synthetic
+problems; plus the instance-sharded execution path vs the dense engine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimConfig,
+    SweepSpec,
+    build_topology,
+    container_costs,
+    fat_tree,
+    feasible_rates,
+    instance_mesh,
+    make_problem,
+    poisson_arrivals,
+    potus_schedule,
+    random_apps,
+    run_sim,
+    run_sweep,
+    sharded_schedule,
+    t_heron_placement,
+)
+from repro.core.potus import SchedProblem
+from repro.core.reference import potus_schedule_reference
+
+
+def _random_system(seed: int, n_apps: int = 3):
+    rng = np.random.default_rng(seed)
+    topo = build_topology(random_apps(rng, n_apps=n_apps), gamma=float(rng.integers(4, 32)))
+    server_dist, _ = fat_tree(4)
+    net = container_costs("ft", server_dist)
+    rates = feasible_rates(topo, utilization=0.7)
+    placement = t_heron_placement(topo, net, rates, max_per_container=8)
+    return topo, net, placement
+
+
+def _integral_inputs(topo, rng, q_scale=10.0, with_must_send=True):
+    I, C = topo.n_instances, topo.n_components
+    q_in = np.round(rng.uniform(0, q_scale, I)).astype(np.float32)
+    q_in[topo.comp_is_spout[topo.inst_comp]] = 0.0
+    succ_mask = topo.adj[topo.inst_comp]  # (I, C)
+    q_out = np.round(rng.uniform(0, q_scale, (I, C))).astype(np.float32) * succ_mask
+    must = np.zeros((I, C), np.float32)
+    if with_must_send:
+        spout = topo.comp_is_spout[topo.inst_comp]
+        must = np.minimum(q_out, np.round(rng.uniform(0, 3, (I, C)))).astype(np.float32)
+        must *= succ_mask * spout[:, None]
+    return q_in, q_out, must
+
+
+class TestSortEqualsLoopEqualsOracle:
+    @pytest.mark.parametrize("seed", range(10))
+    def test_random_dag_topologies(self, seed):
+        """Integral inputs on a random DAG: all three implementations agree."""
+        topo, net, placement = _random_system(seed)
+        rng = np.random.default_rng(seed + 1000)
+        q_in, q_out, must = _integral_inputs(topo, rng)
+        prob = make_problem(topo, net, placement)
+        args = (prob, jnp.asarray(net.U), jnp.asarray(q_in), jnp.asarray(q_out),
+                jnp.asarray(must), 2.0, 1.0)
+        X_sort = np.asarray(potus_schedule(*args))
+        X_loop = np.asarray(potus_schedule(*args, method="loop"))
+        X_ref = potus_schedule_reference(
+            topo.edge_mask_instances(), topo.inst_comp, placement,
+            topo.comp_parallelism, topo.inst_gamma, net.U, q_in, q_out, must, 2.0, 1.0,
+        )
+        np.testing.assert_array_equal(X_sort, X_loop)
+        np.testing.assert_allclose(X_sort, X_ref, rtol=1e-6, atol=1e-5)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_adversarial_ties(self, seed):
+        """Synthetic problems with heavy price ties (tiny integer U/q grids):
+        the sort path must reproduce the loop's argmin tie-breaking."""
+        rng = np.random.default_rng(seed)
+        I, C, K = 40, 6, 4
+        inst_comp = rng.integers(0, C, I).astype(np.int32)
+        edge_mask = (rng.random((I, I)) < 0.35) & (inst_comp[:, None] != inst_comp[None, :])
+        comp_count = np.maximum(np.bincount(inst_comp, minlength=C), 1).astype(np.int32)
+        gamma = rng.integers(1, 8, I).astype(np.float32)
+        placement = rng.integers(0, K, I).astype(np.int32)
+        U = rng.integers(0, 3, (K, K)).astype(np.float32)
+        q_in = rng.integers(0, 4, I).astype(np.float32)
+        q_out = rng.integers(0, 6, (I, C)).astype(np.float32)
+        must = np.zeros((I, C), np.float32)
+        prob = SchedProblem(
+            edge_mask=jnp.asarray(edge_mask),
+            inst_comp=jnp.asarray(inst_comp),
+            inst_container=jnp.asarray(placement),
+            gamma=jnp.asarray(gamma),
+            comp_count=jnp.asarray(comp_count, jnp.float32),
+            is_spout=jnp.zeros((I,), bool),
+            max_succ=I,
+            n_components=C,
+        )
+        args = (prob, jnp.asarray(U), jnp.asarray(q_in), jnp.asarray(q_out),
+                jnp.asarray(must), 2.0, 1.0)
+        X_sort = np.asarray(potus_schedule(*args))
+        X_loop = np.asarray(potus_schedule(*args, method="loop"))
+        X_ref = potus_schedule_reference(
+            edge_mask, inst_comp, placement, comp_count, gamma,
+            U, q_in, q_out, must, 2.0, 1.0,
+        )
+        np.testing.assert_array_equal(X_sort, X_loop)
+        np.testing.assert_allclose(X_sort, X_ref, rtol=1e-6, atol=1e-5)
+
+    def test_paper_system_with_must_send(self, small_system):
+        topo, net, rates, placement = small_system
+        rng = np.random.default_rng(7)
+        q_in, q_out, must = _integral_inputs(topo, rng)
+        prob = make_problem(topo, net, placement)
+        args = (prob, jnp.asarray(net.U), jnp.asarray(q_in), jnp.asarray(q_out),
+                jnp.asarray(must), 3.0, 1.2)
+        np.testing.assert_array_equal(
+            np.asarray(potus_schedule(*args)),
+            np.asarray(potus_schedule(*args, method="loop")),
+        )
+
+    def test_simulated_trajectories_agree(self, small_system):
+        """Whole-simulation agreement: the fast path drives run_sim to the
+        same backlog/cost trajectories as the loop path."""
+        topo, net, rates, placement = small_system
+        T = 50
+        arr = poisson_arrivals(np.random.default_rng(3), rates, T + 8)
+        fast = run_sim(topo, net, placement, arr, T, SimConfig(V=2.0, window=1))
+        loop = run_sim(topo, net, placement, arr, T,
+                       SimConfig(V=2.0, window=1, scheduler="potus-loop"))
+        np.testing.assert_allclose(fast.backlog, loop.backlog, rtol=1e-6, atol=1e-4)
+        np.testing.assert_allclose(fast.comm_cost, loop.comm_cost, rtol=1e-6, atol=1e-4)
+
+
+class TestShardedPath:
+    def test_sharded_schedule_matches_dense(self, small_system):
+        topo, net, rates, placement = small_system
+        rng = np.random.default_rng(11)
+        q_in, q_out, must = _integral_inputs(topo, rng)
+        prob = make_problem(topo, net, placement)
+        mesh = instance_mesh(topo.n_instances)
+        args = (jnp.asarray(net.U), jnp.asarray(q_in), jnp.asarray(q_out),
+                jnp.asarray(must), 2.0, 1.0)
+        X = np.asarray(potus_schedule(prob, *args))
+        X_sharded = np.asarray(sharded_schedule(mesh, prob, *args))
+        np.testing.assert_allclose(X_sharded, X, rtol=1e-6, atol=1e-5)
+
+    def test_run_sim_sharded_matches_dense(self, small_system):
+        topo, net, rates, placement = small_system
+        T = 40
+        arr = poisson_arrivals(np.random.default_rng(5), rates, T + 8)
+        dense = run_sim(topo, net, placement, arr, T, SimConfig(V=2.0, window=2))
+        shard = run_sim(topo, net, placement, arr, T,
+                        SimConfig(V=2.0, window=2, sharded=True))
+        np.testing.assert_allclose(shard.backlog, dense.backlog, rtol=1e-6, atol=1e-4)
+        np.testing.assert_allclose(shard.comm_cost, dense.comm_cost, rtol=1e-6, atol=1e-4)
+        np.testing.assert_allclose(shard.served_total, dense.served_total,
+                                   rtol=1e-6, atol=1e-4)
+        np.testing.assert_allclose(
+            shard.final_state.q_in, dense.final_state.q_in, rtol=1e-5, atol=1e-4)
+
+    def test_sharded_rejects_non_potus(self, small_system):
+        topo, net, rates, placement = small_system
+        arr = poisson_arrivals(np.random.default_rng(5), rates, 20)
+        with pytest.raises(ValueError):
+            run_sim(topo, net, placement, arr, 10,
+                    SimConfig(scheduler="shuffle", sharded=True))
+
+    def test_sweep_sharded_flag(self, small_system):
+        """SweepSpec(sharded=True) runs the grid through the sharded engine
+        and matches the batched dense sweep."""
+        topo, net, rates, placement = small_system
+        T = 30
+        arr = poisson_arrivals(np.random.default_rng(9), rates, T + 8)
+        spec_dense = SweepSpec(V=(1.0, 8.0))
+        spec_shard = SweepSpec(V=(1.0, 8.0), sharded=True)
+        dense = run_sweep(topo, net, placement, arr, T, spec_dense)
+        shard = run_sweep(topo, net, placement, arr, T, spec_shard)
+        for (_, r_d), (_, r_s) in zip(dense, shard):
+            np.testing.assert_allclose(r_s.backlog, r_d.backlog, rtol=1e-6, atol=1e-4)
+
+    def test_sharded_is_not_an_axis(self):
+        with pytest.raises(TypeError):
+            SweepSpec(sharded=(False, True))
+
+    def test_sharded_matches_dense_on_four_devices(self):
+        """The cross-shard communication (all_gather of q_in, psum of column
+        sums, per-shard row slicing) is only live with >1 device; jax locks
+        the device count at first init, so this runs in a subprocess with 4
+        forced host devices (cf. tests/test_distributed.py)."""
+        import json
+        import subprocess
+        import sys
+        import textwrap
+
+        code = textwrap.dedent("""
+            import json
+            import numpy as np
+            from repro.core import (SimConfig, build_topology, container_costs,
+                                    fat_tree, feasible_rates, instance_mesh,
+                                    linear_app, poisson_arrivals, run_sim,
+                                    t_heron_placement)
+
+            topo = build_topology([linear_app(4, parallelism=4, mu=4.0),
+                                   linear_app(3, parallelism=4, mu=5.0)], gamma=12.0)
+            sd, _ = fat_tree(4)
+            net = container_costs("ft", sd)
+            rates = feasible_rates(topo, utilization=0.7)
+            placement = t_heron_placement(topo, net, rates, max_per_container=8)
+            mesh = instance_mesh(topo.n_instances)
+            T = 40
+            arr = poisson_arrivals(np.random.default_rng(7), rates, T + 10)
+            dense = run_sim(topo, net, placement, arr, T, SimConfig(V=2.0, window=2))
+            shard = run_sim(topo, net, placement, arr, T,
+                            SimConfig(V=2.0, window=2, sharded=True))
+            print(json.dumps(dict(
+                n_shards=int(mesh.shape["i"]),
+                dbacklog=float(np.abs(dense.backlog - shard.backlog).max()),
+                dcost=float(np.abs(dense.comm_cost - shard.comm_cost).max()),
+                dqin=float(np.abs(dense.final_state.q_in - shard.final_state.q_in).max()),
+            )))
+        """)
+        proc = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, cwd=".", timeout=600,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu",  # skip TPU-init probe in the subprocess
+                 "XLA_FLAGS": "--xla_force_host_platform_device_count=4"},
+        )
+        assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+        out = json.loads(proc.stdout.splitlines()[-1])
+        assert out["n_shards"] == 4, out  # I = 28 divides by 4
+        assert out["dbacklog"] < 1e-3, out
+        assert out["dcost"] < 1e-3, out
+        assert out["dqin"] < 1e-4, out

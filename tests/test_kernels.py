@@ -8,6 +8,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_call
 from repro.kernels.flash_attention import flash_attention_call
 from repro.kernels.potus_price import potus_price_call
+from repro.kernels.potus_schedule import potus_schedule_call
 from repro.kernels.ssd_scan import ssd_intra_chunk_call
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -144,7 +145,7 @@ class TestPotusPrice:
         np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(want)[fin],
                                    rtol=1e-5, atol=1e-5)
 
-    def test_scheduler_uses_kernel_path(self, small_system):
+    def test_scheduler_price_kernel_on_loop_path(self, small_system):
         """potus_schedule(use_pallas=True) == default path on a real system."""
         import jax.numpy as jnp
         from repro.core import make_problem, potus_schedule
@@ -154,8 +155,65 @@ class TestPotusPrice:
         I, Cn = topo.n_instances, topo.n_components
         q_in = jnp.asarray(np.round(rng.uniform(0, 10, I)).astype(np.float32))
         q_out = jnp.asarray(np.round(rng.uniform(0, 10, (I, Cn))).astype(np.float32))
-        q_out = q_out * jnp.asarray(topo.edge_mask_instances() @ np.eye(I)[..., :0].sum(-1) if False else 1.0)
         must = jnp.zeros((I, Cn), jnp.float32)
+        prob = make_problem(topo, net, placement)
+        a = potus_schedule(prob, jnp.asarray(net.U), q_in, q_out, must, 2.0, 1.0,
+                           method="loop")
+        b = potus_schedule(prob, jnp.asarray(net.U), q_in, q_out, must, 2.0, 1.0,
+                           use_pallas=True, method="loop")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+
+
+class TestPotusFusedSchedule:
+    """Fused price+water-fill kernel (DESIGN.md §7) vs the XLA sort path."""
+
+    def _problem(self, seed, I, K, C):
+        rng = np.random.default_rng(seed)
+        inst_comp = rng.integers(0, C, I).astype(np.int32)
+        mask = (rng.random((I, I)) < 0.25) & (inst_comp[:, None] != inst_comp[None, :])
+        return rng, inst_comp, mask
+
+    @pytest.mark.parametrize("I,K,C,block_i,block_j", [
+        (60, 8, 6, 8, 32),     # padding on both axes (60 % 32, 60 % 8 != 0)
+        (128, 16, 10, 8, 64),
+        (96, 4, 3, 16, 96),    # single column tile
+        (250, 32, 24, 8, 128),
+    ])
+    def test_matches_xla_waterfill(self, I, K, C, block_i, block_j):
+        from repro.core.potus import _allocate_rows
+
+        rng, inst_comp, mask = self._problem(0, I, K, C)
+        U = jnp.asarray(rng.integers(0, 5, (K, K)).astype(np.float32))
+        q_in = jnp.asarray(rng.integers(0, 8, I).astype(np.float32))
+        q_out = jnp.asarray(rng.integers(0, 8, (I, C)).astype(np.float32))
+        gamma = jnp.asarray(rng.integers(1, 12, I).astype(np.float32))
+        kc = jnp.asarray(rng.integers(0, K, I), jnp.int32)
+        comp = jnp.asarray(inst_comp)
+        got = potus_schedule_call(U, q_in, q_out, kc, comp, jnp.asarray(mask),
+                                  gamma, V=2.0, beta=1.0,
+                                  block_i=block_i, block_j=block_j)
+        u_pair = U[kc[:, None], kc[None, :]]
+        l = 2.0 * u_pair + q_in[None, :] - 1.0 * q_out[:, comp]
+        l = jnp.where(jnp.asarray(mask), l, jnp.inf)
+        want = _allocate_rows(l, q_out, gamma, comp, C, I, "sort")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_end_to_end_schedule_parity(self, small_system):
+        """potus_schedule(use_pallas=True) == XLA fast path on a real system,
+        including the mandatory dispatch of actual arrivals."""
+        from repro.core import make_problem, potus_schedule
+
+        topo, net, rates, placement = small_system
+        rng = np.random.default_rng(3)
+        I, Cn = topo.n_instances, topo.n_components
+        succ = topo.adj[topo.inst_comp]
+        q_in = jnp.asarray(np.round(rng.uniform(0, 10, I)).astype(np.float32))
+        q_out = jnp.asarray((np.round(rng.uniform(0, 10, (I, Cn))) * succ).astype(np.float32))
+        spout = topo.comp_is_spout[topo.inst_comp]
+        must = jnp.asarray(
+            (np.minimum(np.asarray(q_out), 2.0) * succ * spout[:, None]).astype(np.float32)
+        )
         prob = make_problem(topo, net, placement)
         a = potus_schedule(prob, jnp.asarray(net.U), q_in, q_out, must, 2.0, 1.0)
         b = potus_schedule(prob, jnp.asarray(net.U), q_in, q_out, must, 2.0, 1.0,

@@ -40,7 +40,8 @@ def test_pipeline_matches_sequential():
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
              "PATH": "/usr/bin:/bin"},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

@@ -3,9 +3,8 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[test])")
-from hypothesis import given, settings, strategies as st
-
 import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     SimConfig,
@@ -20,7 +19,51 @@ from repro.core import (
     run_sim,
     t_heron_placement,
 )
+from repro.core.reference import potus_schedule_reference
 from repro.roofline.hlo_cost import _shape_elems_bytes, analyze_hlo
+
+
+class TestFastPathProperties:
+    """Sort-based water-fill == argmin loop == integer oracle (DESIGN.md §7)
+    on randomized DAGs with integral inputs."""
+
+    @given(
+        sys_seed=st.integers(0, 200),
+        q_seed=st.integers(0, 10_000),
+        v=st.floats(0.1, 20.0),
+        beta=st.floats(0.2, 3.0),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_sort_equals_loop_equals_oracle(self, sys_seed, q_seed, v, beta):
+        rng = np.random.default_rng(sys_seed)
+        topo = build_topology(random_apps(rng, n_apps=2), gamma=float(rng.integers(4, 24)))
+        sd, _ = fat_tree(4)
+        net = container_costs("ft", sd)
+        rates = feasible_rates(topo, utilization=0.7)
+        placement = t_heron_placement(topo, net, rates, max_per_container=8)
+
+        qrng = np.random.default_rng(q_seed)
+        I, C = topo.n_instances, topo.n_components
+        succ = topo.adj[topo.inst_comp]
+        q_in = np.round(qrng.uniform(0, 10, I)).astype(np.float32)
+        q_in[topo.comp_is_spout[topo.inst_comp]] = 0.0
+        q_out = np.round(qrng.uniform(0, 10, (I, C))).astype(np.float32) * succ
+        spout = topo.comp_is_spout[topo.inst_comp]
+        must = np.minimum(q_out, np.round(qrng.uniform(0, 3, (I, C)))).astype(np.float32)
+        must *= succ * spout[:, None]
+
+        prob = make_problem(topo, net, placement)
+        args = (prob, jnp.asarray(net.U), jnp.asarray(q_in), jnp.asarray(q_out),
+                jnp.asarray(must), v, beta)
+        X_sort = np.asarray(potus_schedule(*args))
+        X_loop = np.asarray(potus_schedule(*args, method="loop"))
+        X_ref = potus_schedule_reference(
+            topo.edge_mask_instances(), topo.inst_comp, placement,
+            topo.comp_parallelism, topo.inst_gamma, net.U, q_in, q_out, must,
+            v, beta,
+        )
+        np.testing.assert_array_equal(X_sort, X_loop)
+        np.testing.assert_allclose(X_sort, X_ref, rtol=1e-5, atol=1e-4)
 
 
 class TestSchedulerProperties:

@@ -124,13 +124,18 @@ class TestPallasPath:
 
         topo, net, rates, placement = small_system
         calls = {"n": 0}
-        orig = kops.potus_price
+        orig_price, orig_alloc = kops.potus_price, kops.potus_schedule_alloc
 
-        def spy(*args, **kwargs):
+        def spy_price(*args, **kwargs):
             calls["n"] += 1
-            return orig(*args, **kwargs)
+            return orig_price(*args, **kwargs)
 
-        kops.potus_price = spy
+        def spy_alloc(*args, **kwargs):
+            calls["n"] += 1
+            return orig_alloc(*args, **kwargs)
+
+        kops.potus_price = spy_price
+        kops.potus_schedule_alloc = spy_alloc
         try:
             # the kernel call happens at trace time: drop every cached trace
             # that could short-circuit it (outer scans AND the inner jitted
@@ -156,7 +161,8 @@ class TestPallasPath:
             np.testing.assert_allclose(sw.results[0].backlog, ref.backlog,
                                        rtol=1e-5, atol=1e-3)
         finally:
-            kops.potus_price = orig
+            kops.potus_price = orig_price
+            kops.potus_schedule_alloc = orig_alloc
 
 
 class TestBenchmarkSchema:
