@@ -3,10 +3,14 @@
 Every figure is a parameter sweep, expressed as a
 :class:`repro.core.sweep.SweepSpec` and executed by
 :func:`repro.core.sweep.run_sweep`: Figs. 5(a-d) run on the batched JAX
-engine (the whole V-grid is one vmapped ``lax.scan``), Figs. 4/6 need exact
-per-tuple response times and use the sweep API's cohort engine. ``fig5`` also
-emits a ``fig5/sweep_speedup`` row comparing the batched sweep against the
-old per-scenario ``run_sim`` loop on the same grid.
+engine (the whole V-grid is one vmapped ``lax.scan``), Figs. 4/6 need
+per-tuple response times and run on the fused cohort engine
+(``engine="cohort-fused"``, DESIGN.md §8) — each (scheduler, window)
+partition of the grid compiles once and vmaps over its scenarios instead of
+looping the Python event loop. ``fig5`` also emits a ``fig5/sweep_speedup``
+row comparing the batched sweep against the old per-scenario ``run_sim``
+loop; the cohort-fused-vs-Python trajectory lives in
+``systems_bench.cohort_scale``.
 """
 from __future__ import annotations
 
@@ -19,6 +23,11 @@ from repro.core.prediction import misprediction_scenarios, mse, predictor_scenar
 
 from .common import QUICK, T_COHORT, T_SIM, Row, arrivals_for, paper_system, timer
 
+# age-cap of the fused engine's response tracking (DESIGN.md §8): responses
+# beyond the cap saturate, so high-V grids (Fig. 6ab, responses ~ O(V))
+# need a deeper age axis than the V=1 window sweeps
+_AGE_CAP = {"fig4": 64, "fig6ab": 288, "fig6c": 64}
+
 
 def fig4_response_vs_w() -> list[Row]:
     """Fig. 4: average response time vs lookahead window size W."""
@@ -30,12 +39,13 @@ def fig4_response_vs_w() -> list[Row]:
         for kind in ("poisson", "trace"):
             arr = arrivals_for(sys, kind, T_COHORT)
             spec = SweepSpec(V=1.0, window=tuple(Ws))
+            opts = {"age_cap": _AGE_CAP["fig4"]}
             with timer() as t:
                 sw = run_sweep(sys.topo, sys.net, sys.placement, arr, T_COHORT,
-                               spec, engine="cohort")
+                               spec, engine="cohort-fused", engine_opts=opts)
                 sh = run_sweep(sys.topo, sys.net, sys.placement, arr, T_COHORT,
                                SweepSpec(V=1.0, scheduler="shuffle"),
-                               engine="cohort").results[0]
+                               engine="cohort-fused", engine_opts=opts).results[0]
             derived = ";".join(
                 f"W{s.window}={r.avg_response:.2f}" for s, r in sw
             )
@@ -129,8 +139,11 @@ def fig6ab_predictors() -> list[Row]:
     spec = SweepSpec(V=tuple(float(v) for v in Vs), window=1,
                      arrival=tuple(preds.keys()))
     with timer() as t:
+        # one partition: the whole (V x predictor) grid is a single vmapped
+        # compile + run instead of len(sw) sequential event loops
         sw = run_sweep(sys.topo, sys.net, sys.placement, arrival_map, T_COHORT,
-                       spec, engine="cohort")
+                       spec, engine="cohort-fused",
+                       engine_opts={"age_cap": _AGE_CAP["fig6ab"]})
     us = t.dt / (len(sw) * T_COHORT) * 1e6
     for name, pred in preds.items():
         err = 0.0 if pred is None else mse(pred[:T_COHORT], arr[:T_COHORT])
@@ -155,7 +168,8 @@ def fig6c_misprediction_extremes() -> list[Row]:
     spec = SweepSpec(V=1.0, window=tuple(Ws), arrival=tuple(cases.keys()))
     with timer() as t:
         sw = run_sweep(sys.topo, sys.net, sys.placement, arrival_map, T_COHORT,
-                       spec, engine="cohort")
+                       spec, engine="cohort-fused",
+                       engine_opts={"age_cap": _AGE_CAP["fig6c"]})
     us = t.dt / (len(sw) * T_COHORT) * 1e6
     for name in cases:
         pts = sw.select(arrival=name)

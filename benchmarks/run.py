@@ -1,12 +1,31 @@
 """Benchmark driver — one section per paper table/figure plus framework
-microbenchmarks. Prints ``name,us_per_call,derived`` CSV.
+microbenchmarks. Prints ``name,us_per_call,derived`` CSV; the cohort-engine
+scaling rows are additionally dumped as machine-readable JSON to
+``BENCH_cohort.json`` (override the path with REPRO_BENCH_COHORT_JSON) so
+the fused-vs-Python perf trajectory is tracked across PRs.
 
 Set REPRO_BENCH_FULL=1 for the full (paper-scale) sweeps.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+
+def _dump_cohort_json(systems_bench) -> None:
+    if not systems_bench.COHORT_BENCH:
+        return
+    path = os.environ.get("REPRO_BENCH_COHORT_JSON", "BENCH_cohort.json")
+    payload = {
+        "schema": "cohort-bench/v1",
+        "rows": systems_bench.COHORT_BENCH,  # engine, I, T, wall_s, speedup
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(systems_bench.COHORT_BENCH)} rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -17,6 +36,7 @@ def main() -> None:
         ("fig5", paper_figures.fig5_backlog_and_cost_vs_v),
         ("fig6ab", paper_figures.fig6ab_predictors),
         ("fig6c", paper_figures.fig6c_misprediction_extremes),
+        ("cohort_scale", systems_bench.cohort_scale),
         ("scheduler_scale", systems_bench.scheduler_fastpath),
         ("scheduler_sweep", systems_bench.scheduler_scale),
         ("kernels", systems_bench.kernels_micro),
@@ -35,6 +55,7 @@ def main() -> None:
                 print(row.csv(), flush=True)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+    _dump_cohort_json(systems_bench)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,5 +1,6 @@
 """Framework-level microbenchmarks: scheduler scaling (§4.2 complexity),
-kernels, MoE routers, and the POTUS serving dispatcher."""
+cohort-engine scaling (fused vs Python event loop), kernels, MoE routers,
+and the POTUS serving dispatcher."""
 from __future__ import annotations
 
 import time
@@ -9,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    SimConfig,
     SweepSpec,
     build_topology,
     container_costs,
@@ -18,12 +20,24 @@ from repro.core import (
     make_problem,
     poisson_arrivals,
     potus_schedule,
+    run_cohort_fused,
+    run_cohort_sim,
     run_sweep,
     sharded_schedule,
 )
 from repro.core.topology import Component
 
 from .common import QUICK, SMOKE, Row, timer
+
+# machine-readable cohort-engine perf rows, dumped to BENCH_cohort.json by
+# benchmarks/run.py so the trajectory is tracked across PRs
+COHORT_BENCH: list[dict] = []
+
+
+def _timed(fn) -> float:
+    with timer() as t:  # same clock as the `with timer()` blocks it races
+        fn()
+    return t.dt
 
 
 def _fleet(n_replicas: int, parallel_chains: int = 4):
@@ -111,6 +125,117 @@ def scheduler_fastpath() -> list[Row]:
                         f"sort_us={sort_t*1e6:.0f};loop_us={loop_t*1e6:.0f};"
                         f"speedup={loop_t/sort_t:.1f}x"))
     return rows
+
+
+def _cohort_fleet(I_target: int):
+    """4 serving chains (src -> serve -> sink, C = 12) with parallelism scaled
+    so ``n_instances == I_target`` — the response-time analogue of
+    ``_fleet_exact`` (spouts and terminal bolts included so the cohort
+    engines have streams to measure)."""
+    chains = 4
+    per = I_target // chains
+    src = max(per // 8, 1)
+    sink = max(per // 8, 1)
+    apps = []
+    for a in range(chains):
+        apps.append([
+            Component("src", a, True, parallelism=src, successors=(1,)),
+            Component("serve", a, False, parallelism=per - src - sink,
+                      proc_capacity=4.0, successors=(2,)),
+            Component("sink", a, False, parallelism=sink, proc_capacity=8.0),
+        ])
+    return build_topology(apps, gamma=32.0)
+
+
+def cohort_scale() -> list[Row]:
+    """Fused cohort engine vs the Python event loop at fleet scale: identical
+    response-time semantics (tests/test_cohort_fused.py), wall time per
+    T-slot simulation, for the paper's two headline schedulers. Shuffle
+    isolates the *engine* cost (its decision is trivial, and its dense
+    dispatch is the Python loop's worst case); POTUS rows share the jitted
+    Algorithm-1 call between both engines, so they bound the win by the
+    scheduler's own cost at that scale. The fused rows report warm
+    (post-compile) time — the compile is paid once per (topology, T) and
+    amortizes over every scenario of a grid — with the one-time compile
+    seconds in ``derived``."""
+    rows = []
+    sizes = [64] if SMOKE else [64, 256, 1024]
+    T = 24 if SMOKE else 128
+    age_cap = 32
+    for I_target in sizes:
+        topo = _cohort_fleet(I_target)
+        I = topo.n_instances
+        server_dist, _ = fat_tree(4)
+        net = container_costs(f"cohort-fleet-{I}", server_dist, containers_per_server=8)
+        rng = np.random.default_rng(0)
+        placement = rng.integers(0, net.n_containers, I).astype(np.int32)
+        rates = feasible_rates(topo, utilization=0.85)
+        arr = poisson_arrivals(rng, rates, T + 8)
+        for sched in ("shuffle", "potus"):
+            cfg = SimConfig(V=2.0, window=4, scheduler=sched)
+            with timer() as t_py:
+                py = run_cohort_sim(topo, net, placement, arr, None, T, cfg)
+            with timer() as t_compile:  # first call: trace + compile + run
+                run_cohort_fused(topo, net, placement, arr, None, T, cfg, age_cap=age_cap)
+            out: dict = {}
+
+            def fused_once():
+                out["res"] = run_cohort_fused(topo, net, placement, arr, None, T, cfg,
+                                              age_cap=age_cap)
+
+            t_fused = min(_timed(fused_once) for _ in range(2))
+            fused = out["res"]
+            speedup = t_py.dt / t_fused
+            db = abs(py.avg_backlog - fused.avg_backlog) / max(py.avg_backlog, 1e-9)
+            for engine, dt in (("python", t_py.dt), ("fused", t_fused)):
+                rows.append(Row(f"cohort_scale/{engine}/{sched}/I{I}", dt / T * 1e6,
+                                f"instances={I};T={T};wall_s={dt:.3f}"))
+                COHORT_BENCH.append(dict(
+                    section="cohort_scale", engine=engine, scheduler=sched, I=I, T=T,
+                    wall_s=round(dt, 4),
+                    speedup=round(speedup, 2) if engine == "fused" else 1.0,
+                ))
+            rows.append(Row(f"cohort_scale/speedup/{sched}/I{I}", t_fused / T * 1e6,
+                            f"python_s={t_py.dt:.3f};fused_s={t_fused:.3f};"
+                            f"compile_s={t_compile.dt - t_fused:.2f};"
+                            f"speedup={speedup:.1f}x;backlog_agree={1 - db:.4f}"))
+    rows.extend(_cohort_grid_row())
+    return rows
+
+
+def _cohort_grid_row() -> list[Row]:
+    """Fig. 6ab-shaped response grid: one vmapped cohort-fused compile vs the
+    sequential Python event loop over the same scenarios."""
+    from repro.core.prediction import all_true_negative
+
+    topo = _cohort_fleet(64)
+    I = topo.n_instances
+    server_dist, _ = fat_tree(4)
+    net = container_costs("cohort-grid", server_dist, containers_per_server=8)
+    rng = np.random.default_rng(1)
+    placement = rng.integers(0, net.n_containers, I).astype(np.int32)
+    rates = feasible_rates(topo, utilization=0.7)
+    T = 24 if SMOKE else 48
+    arr = poisson_arrivals(rng, rates, T + 8)
+    amap = {"perfect": arr, "none": (arr, all_true_negative(arr))}
+    spec = SweepSpec(V=(1.0, 2.0, 5.0, 10.0), window=1, arrival=("perfect", "none"))
+    opts = {"age_cap": 32}
+
+    run_sweep(topo, net, placement, amap, T, spec, engine="cohort-fused",
+              engine_opts=opts)  # compile
+    t_fused = _timed(lambda: run_sweep(topo, net, placement, amap, T, spec,
+                                       engine="cohort-fused", engine_opts=opts))
+    t_py = _timed(lambda: run_sweep(topo, net, placement, amap, T, spec,
+                                    engine="cohort"))
+    n = spec.n_scenarios
+    COHORT_BENCH.append(dict(section="cohort_grid", engine="fused", scheduler="potus",
+                             I=I, T=T, wall_s=round(t_fused, 4),
+                             speedup=round(t_py / t_fused, 2)))
+    COHORT_BENCH.append(dict(section="cohort_grid", engine="python", scheduler="potus",
+                             I=I, T=T, wall_s=round(t_py, 4), speedup=1.0))
+    return [Row("cohort_scale/grid", t_fused / (n * T) * 1e6,
+                f"scenarios={n};batches=1;fused_s={t_fused:.3f};"
+                f"python_s={t_py:.3f};speedup={t_py / t_fused:.1f}x")]
 
 
 def scheduler_scale() -> list[Row]:

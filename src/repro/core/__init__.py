@@ -8,6 +8,7 @@ engine).
 from . import prediction
 from .baselines import jsq_schedule, shuffle_schedule
 from .cohort import CohortResult, run_cohort_sim
+from .cohort_fused import run_cohort_fused
 from .network import NetworkCosts, container_costs, fat_tree, jellyfish
 from .placement import instance_traffic, t_heron_placement
 from .potus import SchedProblem, make_problem, potus_prices, potus_schedule
@@ -27,7 +28,7 @@ __all__ = [
     "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
     "SimConfig", "SimResult", "run_sim", "sim_step",
     "instance_mesh", "run_sim_sharded", "sharded_schedule",
-    "CohortResult", "run_cohort_sim",
+    "CohortResult", "run_cohort_sim", "run_cohort_fused",
     "Scenario", "SweepSpec", "SweepResult", "run_sweep",
     "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",
 ]

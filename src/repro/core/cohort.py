@@ -25,6 +25,11 @@ replaced by the mean, across components the max is kept.
 Scheduling decisions come from the same jitted schedulers as the JAX engine
 (`potus_schedule`, `shuffle_schedule`, ...), so both engines exercise one
 implementation of Algorithm 1.
+
+This event loop is the *semantic oracle*: ``core.cohort_fused`` re-expresses
+the same dynamics as age-tagged arrays under ``lax.scan`` (DESIGN.md §8) and
+is differentially tested against it; use the fused engine for grids and
+scale, this one to pin down semantics.
 """
 from __future__ import annotations
 
@@ -51,6 +56,10 @@ class CohortResult:
     comm_cost: np.ndarray  # (T,)
     n_cohorts: int
     completed_frac: float
+    # fraction of terminal completions reporting the age-capped response —
+    # always 0.0 here (the event loop tracks ages exactly); the fused engine
+    # (DESIGN.md §8) sets it so callers can tell when age_cap is too shallow
+    saturated_frac: float = 0.0
 
 
 class _Fifo:
@@ -147,6 +156,7 @@ def run_cohort_sim(
 
     backlog_ts = np.zeros(T)
     cost_ts = np.zeros(T)
+    U_dev = jnp.asarray(U)  # hoisted: one host->device transfer, not one per slot
 
     target_split_cache: dict[int, np.ndarray] = {
         c: topo.instances_of(c) for c in range(C)
@@ -178,7 +188,7 @@ def run_cohort_sim(
             q_out_arr[i, c2] = f.total
 
         X = np.asarray(
-            sched(prob, jnp.asarray(U), jnp.asarray(q_in_arr), jnp.asarray(q_out_arr),
+            sched(prob, U_dev, jnp.asarray(q_in_arr), jnp.asarray(q_out_arr),
                   jnp.asarray(must_send), float(cfg.V), float(cfg.beta))
         )
         backlog_ts[t] = q_in_arr.sum() + cfg.beta * q_out_arr.sum()
@@ -257,14 +267,17 @@ def run_cohort_sim(
                     q_out[(i, c2)].push({k: m * f for k, m in served.items()})
 
         # -- 5. shift spout windows, load prediction for slot t + W + 1 --------
+        # every lookahead position moves one slot closer to current; the
+        # vacated tail admits the prediction for slot t + W + 1 (eqs. 5-7).
+        # With W == 0 the "shift" is the whole story: the single position is
+        # overwritten by predicted[t + 1], which next slot's reconciliation
+        # immediately replaces with the actual arrivals (r == 1 there, since
+        # an untouched fresh prediction is fully untreated).
         for (i, c2) in spout_streams:
             w_arr = window_unt[(i, c2)]
             w_arr[:-1] = w_arr[1:]
             nxt = t + W + 1
             w_arr[-1] = predicted[nxt, i, c2] if nxt < predicted.shape[0] else 0.0
-            if W == 0:
-                # no lookahead: entries are reconciled immediately next slot
-                pass
 
     # --- aggregate response times ---------------------------------------------
     horizon = T - (drain_margin if drain_margin is not None else max(2 * W + 20, 40))

@@ -1,0 +1,555 @@
+"""Fused cohort engine — response-time semantics as one JAX ``lax.scan``
+(DESIGN.md §8).
+
+The Python cohort engine (``core.cohort``) reproduces the paper's per-tuple
+response-time metric (§5.1, Figs. 4/6) but is interpreter-bound: a per-slot
+event loop over dict/deque FIFOs with a host round-trip into the jitted
+scheduler every slot, which ``core.sweep`` cannot ``vmap``. This module
+re-expresses the same semantics on dense arrays so the whole T-slot
+simulation compiles to a single ``lax.scan`` (schedulers traced in-graph)
+and entire scenario grids batch with ``jax.vmap``
+(``run_sweep(engine="cohort-fused")``).
+
+Representation (DESIGN.md §8): every FIFO becomes an **age-by-source-slot
+mass matrix**. At slot ``t``, bucket ``b`` of an age axis of depth
+``Atot = age_cap + W + 1`` holds the tuple mass whose *source slot* (the
+actual-arrival slot its response is measured from) is ``s = t - age_cap + b``
+— bucket ``age_cap`` is mass arriving this slot, buckets above it are
+pre-served future mass (negative age), bucket 0 saturates at age ``age_cap``
+(the A-cap truncation rule). Queues are stored **successor-compact**: output
+state carries an axis of size ``S = max successors per component`` instead
+of all C components, and the per-slot hot ops — the oldest-first drain and
+the proportional split of drained mass over successor instances — run as
+per-DAG-edge blocks over the (statically contiguous) instance ranges of each
+component, so their cost scales with the edges that exist rather than I x C.
+State per scenario:
+
+* ``q_rem``   (I, S, W+1)  — spout lookahead windows (untreated mass);
+* ``admit``   (I, S)       — admission backlog of unshipped actuals;
+* ``q_in``    (I, Atot)    — bolt input queues, mass per age bucket;
+* ``q_out``   (I, S, Atot) — bolt output queues, mass per age bucket;
+* ``transit`` (I, Atot)    — mass landing in input queues next slot.
+
+FIFO ``drain(amount)`` becomes a masked prefix-sum along the age axis
+("water-fill over ages": ``clip(amount - cum_before, 0, bucket)``), window
+reconciliation (TP/FP/TN mis-prediction splitting, phantom pre-serves,
+admission backlog) becomes pure array ops, and the drain + split is
+optionally fused into one VMEM pass by the Pallas kernel
+``kernels/cohort_drain.py`` (behind ``use_pallas``).
+
+Deliberate deltas vs the Python engine, documented in DESIGN.md §8: queues
+serve oldest-*source-slot*-first instead of oldest-*push*-first (identical
+drain totals, so scheduler inputs — and therefore backlog and cost — match;
+only the response attribution of partially-drained mixed queues shifts), and
+cohorts of one source slot are merged across entry components that reach a
+common terminal (the per-key max of §2 runs over the terminals *reachable*
+from each entry component). Both engines share the within-cohort mean
+approximation. Parity is differentially tested in
+``tests/test_cohort_fused.py`` — bit-level on exact-arithmetic systems,
+statistically on the paper-profile grids, where f32-vs-f64 near-tie flips
+make queue-feedback schedulers (POTUS, JSQ) chaotically sensitive (the same
+phenomenon ``tests/test_core_dynamics.py`` documents between the JAX and
+cohort engines).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cohort import CohortResult
+from .network import NetworkCosts
+from .potus import make_problem
+from .simulator import SimConfig, _get_scheduler, pad_arrivals
+from .topology import Topology
+
+__all__ = ["run_cohort_fused", "run_fused_sweep", "drain_ages"]
+
+_EPS = 1e-12  # same negligible-mass threshold as the Python engine's FIFOs
+
+
+def drain_ages(buckets: jax.Array, amount: jax.Array) -> jax.Array:
+    """Mass removed from each age bucket when ``amount`` is drained
+    oldest-first: a masked prefix-sum water-fill along the last axis.
+
+    Returns an array like ``buckets``; total removed is
+    ``min(amount, buckets.sum(-1))`` and removal is always an age *prefix*
+    (a bucket is touched only once every older bucket is empty) — the two
+    invariants the hypothesis property in ``tests/test_cohort_fused.py``
+    pins down.
+    """
+    cum = jnp.cumsum(buckets, axis=-1)
+    return jnp.clip(amount[..., None] - (cum - buckets), 0.0, buckets)
+
+
+# ---------------------------------------------------------------------------
+# successor-compact topology view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Compact:
+    """Static successor-compact structure of one topology.
+
+    ``edges`` drives the per-edge blocked drain-split: one entry per DAG edge
+    (source component -> successor component), carrying the source instance
+    range, the successor's slot in the source's successor list, and the
+    target instance range. Instance ranges are contiguous by construction
+    (``build_topology`` appends instances in component order).
+    """
+
+    S: int  # max successors of any component (>= 1)
+    edges: tuple  # ((row_start, row_end, slot, col_start, col_end), ...)
+    succ_map: np.ndarray  # (I, S) int32 successor comp per slot; C = no edge
+    valid: np.ndarray  # (I, S) f32 — 1 where the slot is a real successor
+    sel_cmp: np.ndarray  # (I, S) f32 — selectivity toward each successor
+    stream_cmp: np.ndarray  # (I, S) f32 — valid & spout row (window streams)
+
+
+def _compact(topo: Topology) -> _Compact:
+    I, C = topo.n_instances, topo.n_components
+    is_spout = topo.comp_is_spout[topo.inst_comp]
+    S = max(1, max((len(topo.successors_of_comp(c)) for c in range(C)), default=1))
+    succ_map = np.full((I, S), C, np.int32)
+    valid = np.zeros((I, S), np.float32)
+    sel_cmp = np.zeros((I, S), np.float32)
+    edges = []
+    for c in range(C):
+        rows = topo.instances_of(c)
+        if len(rows) == 0:
+            continue
+        if rows[-1] - rows[0] + 1 != len(rows):
+            raise ValueError(
+                f"instances of component {c} are not contiguous; the fused "
+                "cohort engine requires build_topology-style instance order"
+            )
+        rs, re = int(rows[0]), int(rows[-1]) + 1
+        for s, c2 in enumerate(topo.successors_of_comp(c)):
+            cols = topo.instances_of(int(c2))
+            cs, ce = int(cols[0]), int(cols[-1]) + 1
+            edges.append((rs, re, s, cs, ce))
+            succ_map[rs:re, s] = c2
+            valid[rs:re, s] = 1.0
+            sel_cmp[rs:re, s] = topo.selectivity[c, c2]
+    stream_cmp = valid * is_spout[:, None].astype(np.float32)
+    return _Compact(S, tuple(edges), succ_map, valid, sel_cmp, stream_cmp)
+
+
+def _fused_step(
+    prob,
+    sched,
+    edges: tuple,
+    U: jax.Array,  # (K, K)
+    u_pair: jax.Array,  # (I, I)
+    mu: jax.Array,  # (I,)
+    sel_cmp: jax.Array,  # (I, S)
+    stream_cmp: jax.Array,  # (I, S)
+    valid_cmp: jax.Array,  # (I, S)
+    succ_map: jax.Array,  # (I, S) int32
+    term_f: jax.Array,  # (I,) 1.0 on terminal-bolt instances
+    comp_onehot: jax.Array,  # (I, C)
+    age_cap: int,
+    use_pallas: bool,
+    V: jax.Array,
+    beta: jax.Array,
+    state,
+    xs,
+):
+    """One slot of the cohort dynamics (mirrors ``core.cohort`` step order)."""
+    act_t, pred_t, new_pred, t = xs
+    q_rem, admit, q_in_tag, q_out_tag, transit, resp_mass, resp_time = state
+    I, S, W1 = q_rem.shape
+    C = comp_onehot.shape[1]
+    Atot = q_in_tag.shape[-1]  # = age_cap + (W1 - 1) + 1
+    S_acc = resp_mass.shape[-1]
+    is_spout = prob.is_spout
+    spout_f = is_spout.astype(q_rem.dtype)
+    bolt_f = 1.0 - spout_f
+    rows = jnp.arange(I)[:, None]
+    gather_idx = jnp.minimum(succ_map, C - 1)
+
+    def to_dense(x_cmp):  # (I, S) -> (I, C); the C sentinel column is dropped
+        return jnp.zeros((I, C + 1), x_cmp.dtype).at[rows, succ_map].add(x_cmp)[:, :C]
+
+    def to_cmp(x):  # (I, C) -> (I, S)
+        return jnp.take_along_axis(x, gather_idx, axis=1) * valid_cmp
+
+    # -- 1. reconcile window pos-0 with actual arrivals of slot t ------------
+    pred_m = to_cmp(pred_t) * stream_cmp
+    act_m = to_cmp(act_t) * stream_cmp
+    tp = jnp.minimum(pred_m, act_m)
+    tn = act_m - tp
+    r = jnp.where(pred_m > 0, q_rem[:, :, 0] / jnp.where(pred_m > 0, pred_m, 1.0), 0.0)
+    q_rem = q_rem.at[:, :, 0].set(r * tp + tn)  # drop unserved phantoms
+
+    # -- 2. observe queue state, schedule ------------------------------------
+    q_in_arr = q_in_tag.sum(-1)
+    q_out_cmp = jnp.where(is_spout[:, None], q_rem.sum(-1), q_out_tag.sum(-1))
+    q_out_arr = to_dense(q_out_cmp)
+    must_send = to_dense((q_rem[:, :, 0] + admit) * spout_f[:, None])
+    X = sched(prob, U, q_in_arr, q_out_arr, must_send, V, beta)
+    backlog = q_in_arr.sum() + beta * q_out_arr.sum()
+    cost = (X * u_pair).sum()
+
+    # -- 3. drain sources oldest-first, split over targets -------------------
+    # requested mass per successor slot: blocked column sums over DAG edges
+    shipped = jnp.zeros((I, S), q_rem.dtype)
+    for (rs, re, s, cs, ce) in edges:
+        shipped = shipped.at[rs:re, s].set(X[rs:re, cs:ce].sum(axis=1))
+    # unified drain buffer: bolts ship from q_out buckets; spouts ship the
+    # window in ascending lookahead (buckets age_cap..age_cap+W), then the
+    # admission backlog (a trailing slot, re-tagged to age 0 when it lands)
+    src_spout = jnp.concatenate(
+        [jnp.zeros((I, S, age_cap), q_rem.dtype), q_rem, admit[:, :, None]], axis=-1
+    )
+    src_bolt = jnp.concatenate([q_out_tag, jnp.zeros((I, S, 1), q_rem.dtype)], axis=-1)
+    src_ext = jnp.where(is_spout[:, None, None], src_spout, src_bolt)  # (I, S, Atot+1)
+    drained = drain_ages(src_ext, shipped)
+    q_rem = q_rem - drained[:, :, age_cap:Atot] * spout_f[:, None, None]
+    admit = admit - drained[:, :, -1] * spout_f[:, None]
+    q_out_tag = q_out_tag - drained[:, :, :Atot] * bolt_f[:, None, None]
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        # the kernel's split is component-dense: expand the compact buffers
+        src_dense = jnp.zeros((I, C + 1, Atot + 1), q_rem.dtype)
+        src_dense = src_dense.at[rows, succ_map, :].add(src_ext)[:, :C]
+        ship_dense = to_dense(shipped)
+        ship_cols = ship_dense[:, prob.inst_comp]  # (I, I)
+        ratio = jnp.where(ship_cols > _EPS, X / jnp.where(ship_cols > 0, ship_cols, 1.0), 0.0)
+        land = kops.cohort_drain_split(src_dense, ship_dense, ratio, prob.inst_comp, age_cap)
+    else:
+        # proportional split, one skinny matmul per DAG edge
+        land = jnp.zeros((I, Atot), q_rem.dtype)
+        for (rs, re, s, cs, ce) in edges:
+            d_land = drained[rs:re, s, :Atot].at[:, age_cap].add(drained[rs:re, s, -1])
+            sh = shipped[rs:re, s]
+            ratio_b = jnp.where(
+                (sh > _EPS)[:, None], X[rs:re, cs:ce] / jnp.where(sh > 0, sh, 1.0)[:, None], 0.0
+            )
+            land = land.at[cs:ce].add(jax.lax.dot_general(
+                ratio_b, d_land, (((0,), (0,)), ((), ())),
+                preferred_element_type=q_rem.dtype,
+            ))
+
+    # -- 4. land last slot's transit, serve bolts ----------------------------
+    avail = q_in_tag + transit
+    served_amt = jnp.minimum(avail.sum(-1), mu) * bolt_f
+    served_b = drain_ages(avail, served_amt)
+    q_in_tag = (avail - served_b) * bolt_f[:, None]
+    # terminal completions -> response accumulators at absolute source slots
+    cmass = comp_onehot.T @ (served_b * term_f[:, None])  # (C, Atot)
+    resp_per_b = jnp.maximum(
+        age_cap - jnp.arange(Atot, dtype=q_rem.dtype), 0.0
+    )  # clip(t - s, 0); saturated mass reports age_cap
+    idx = t - age_cap + jnp.arange(Atot)
+    idx = jnp.where(idx < 0, S_acc, idx)  # out-of-range => dropped by scatter
+    resp_mass = resp_mass.at[:, idx].add(cmass, mode="drop")
+    resp_time = resp_time.at[:, idx].add(cmass * resp_per_b[None, :], mode="drop")
+    # completions reporting the capped response — nonzero means age_cap is
+    # (or is close to) too shallow and the response metric is biased low
+    capped_served = cmass[:, 0].sum()
+    term_served = cmass.sum()
+    # emissions: served * selectivity into own output queues (same buckets)
+    q_out_tag = q_out_tag + served_b[:, None, :] * sel_cmp[:, :, None] * bolt_f[:, None, None]
+
+    # -- 5. admit leftover actuals, shift windows and age axes ---------------
+    admit = admit + q_rem[:, :, 0] * spout_f[:, None]
+    q_rem = jnp.concatenate(
+        [q_rem[:, :, 1:], (to_cmp(new_pred) * stream_cmp)[:, :, None]], axis=-1
+    )
+
+    def shift(x):  # age b+1 -> b; the oldest bucket saturates (A-cap rule)
+        head = x[..., 0:1] + x[..., 1:2]
+        return jnp.concatenate([head, x[..., 2:], jnp.zeros_like(x[..., 0:1])], axis=-1)
+
+    state = (q_rem, admit, shift(q_in_tag), shift(q_out_tag), shift(land), resp_mass, resp_time)
+    return state, (backlog, cost, capped_served, term_served)
+
+
+@partial(jax.jit, static_argnames=("edges", "scheduler", "use_pallas", "age_cap",
+                                   "n_components", "shared_inputs"))
+def _scan_cohort_fused(
+    prob,
+    U: jax.Array,  # (K, K)
+    mu: jax.Array,  # (I,)
+    sel_cmp: jax.Array,  # (I, S)
+    stream_cmp: jax.Array,  # (I, S)
+    valid_cmp: jax.Array,  # (I, S)
+    succ_map: jax.Array,  # (I, S) int32
+    term_f: jax.Array,  # (I,)
+    actual_s: jax.Array,  # (S?, T, I, C) actual arrivals (unbatched if shared)
+    pred_s: jax.Array,  # (S?, T, I, C) predictions for slots 0..T-1
+    nxt_s: jax.Array,  # (S?, T, I, C) predictions entering the window (t+W+1)
+    q_rem0: jax.Array,  # (S?, I, S, W+1) pre-loaded windows, compact
+    Vs: jax.Array,  # (S,)
+    betas: jax.Array,  # (S,)
+    edges: tuple = (),
+    scheduler: str = "potus",
+    use_pallas: bool = False,
+    age_cap: int = 64,
+    n_components: int = 1,
+    shared_inputs: bool = False,
+):
+    sched = _get_scheduler(scheduler, use_pallas)
+    u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
+    comp_onehot = jax.nn.one_hot(prob.inst_comp, n_components, dtype=mu.dtype)
+
+    def one(actual, pred, nxt, q0, V, beta):
+        T, I, _ = actual.shape
+        S = q0.shape[1]
+        W1 = q0.shape[-1]
+        Atot = age_cap + W1
+        S_acc = T + W1
+        state0 = (
+            q0,
+            jnp.zeros((I, S), mu.dtype),
+            jnp.zeros((I, Atot), mu.dtype),
+            jnp.zeros((I, S, Atot), mu.dtype),
+            jnp.zeros((I, Atot), mu.dtype),
+            jnp.zeros((n_components, S_acc), mu.dtype),
+            jnp.zeros((n_components, S_acc), mu.dtype),
+        )
+        step = partial(
+            _fused_step, prob, sched, edges, U, u_pair, mu, sel_cmp, stream_cmp,
+            valid_cmp, succ_map, term_f, comp_onehot, age_cap, use_pallas, V, beta,
+        )
+        xs = (actual, pred, nxt, jnp.arange(T))
+        final, (backlog, cost, capped, served) = jax.lax.scan(step, state0, xs)
+        return final[-2], final[-1], backlog, cost, capped.sum(), served.sum()
+
+    in_axes = (None, None, None, None, 0, 0) if shared_inputs else (0, 0, 0, 0, 0, 0)
+    return jax.vmap(one, in_axes=in_axes)(actual_s, pred_s, nxt_s, q_rem0, Vs, betas)
+
+
+# ---------------------------------------------------------------------------
+# host-side preparation and aggregation
+# ---------------------------------------------------------------------------
+
+def _stream_mask(topo: Topology) -> np.ndarray:
+    """(I, C) — 1.0 on the (spout instance, successor component) streams the
+    Python engine enumerates as ``spout_streams``."""
+    is_spout = topo.comp_is_spout[topo.inst_comp]
+    return (topo.adj[topo.inst_comp] & is_spout[:, None]).astype(np.float32)
+
+
+def _terminal_mask(topo: Topology) -> np.ndarray:
+    term = np.zeros(topo.n_components, bool)
+    term[topo.terminal_components] = True
+    is_spout = topo.comp_is_spout[topo.inst_comp]
+    return (term[topo.inst_comp] & ~is_spout).astype(np.float32)
+
+
+def _reachability(topo: Topology) -> np.ndarray:
+    """(C, C) bool — transitive closure of the component DAG (incl. self)."""
+    C = topo.n_components
+    reach = topo.adj | np.eye(C, dtype=bool)
+    for _ in range(C):  # C squarings overshoot any DAG diameter
+        nxt = reach | (reach @ reach)
+        if (nxt == reach).all():
+            break
+        reach = nxt
+    return reach
+
+
+def _prep_streams(actual, predicted, T: int, W: int, cpt: _Compact, mask: np.ndarray):
+    """Pad/slice one scenario's arrival tensors into scan inputs."""
+    act = pad_arrivals(np.asarray(actual, np.float32), T)[:T]
+    pred = pad_arrivals(np.asarray(predicted if predicted is not None else actual,
+                                   np.float32), T + W + 1)
+    q_rem0 = np.moveaxis(pred[: W + 1], 0, -1) * mask[:, :, None]  # (I, C, W+1)
+    C = mask.shape[1]
+    idx = np.minimum(cpt.succ_map, C - 1)[:, :, None]
+    q_rem0_cmp = np.take_along_axis(q_rem0, idx, axis=1) * cpt.valid[:, :, None]
+    return act, pred[:T], pred[W + 1: T + W + 1], q_rem0_cmp.astype(np.float32)
+
+
+def _aggregate(
+    resp_mass: np.ndarray,  # (C, S_acc)
+    resp_time: np.ndarray,  # (C, S_acc)
+    weights: np.ndarray,  # (C, T) actual arrivals per (entry component, slot)
+    reach: np.ndarray,  # (C, C) bool component reachability
+    backlog: np.ndarray,  # (T,)
+    cost: np.ndarray,  # (T,)
+    saturated_frac: float,  # capped / total terminal completions (whole run)
+    T: int,
+    W: int,
+    warmup: int,
+    drain_margin: int | None,
+) -> CohortResult:
+    """Weighted response aggregation, mirroring ``core.cohort`` (§2): per key
+    (entry component, source slot), the max over *reachable* terminal
+    components of the mass-weighted mean response, weighted by actual
+    arrivals. The per-terminal means merge entry components that share a
+    terminal (DESIGN.md §8) — the reachability restriction keeps each app's
+    (and each entry's) max over its own terminals only."""
+    horizon = T - (drain_margin if drain_margin is not None else max(2 * W + 20, 40))
+    lo, hi = max(warmup, 0), min(horizon, T)
+    avg_backlog = float(backlog[warmup:].mean()) if T > warmup else float(backlog.mean())
+    avg_cost = float(cost[warmup:].mean()) if T > warmup else float(cost.mean())
+    if hi <= lo:
+        nan = float("nan")
+        return CohortResult(
+            avg_response=nan, p95_response=nan, avg_backlog=avg_backlog,
+            avg_cost=avg_cost, backlog=backlog, comm_cost=cost,
+            n_cohorts=0, completed_frac=0.0, saturated_frac=saturated_frac,
+        )
+    entry_ids = np.nonzero(weights[:, lo:hi].sum(axis=1) > 0)[0]  # (E,)
+    live = resp_mass[:, lo:hi] > 1e-9  # (C, H)
+    mean_ds = np.where(live, resp_time[:, lo:hi] / np.maximum(resp_mass[:, lo:hi], 1e-30),
+                       -np.inf)
+    resp_es = np.full((len(entry_ids), hi - lo), -np.inf)
+    for k, e in enumerate(entry_ids):
+        resp_es[k] = mean_ds[reach[e]].max(axis=0, initial=-np.inf)
+    w_es = weights[entry_ids, lo:hi]
+    valid = (w_es > 0) & np.isfinite(resp_es)
+    if valid.any():
+        resp_arr, wt_arr = resp_es[valid], w_es[valid]
+        avg = float(np.average(resp_arr, weights=wt_arr))
+        order = np.argsort(resp_arr)
+        cum = np.cumsum(wt_arr[order]) / wt_arr.sum()
+        p95 = float(resp_arr[order][np.searchsorted(cum, 0.95)])
+    else:
+        avg, p95 = float("nan"), float("nan")
+    measured = int((weights[:, lo:hi] > 0).sum())
+    return CohortResult(
+        avg_response=avg,
+        p95_response=p95,
+        avg_backlog=avg_backlog,
+        avg_cost=avg_cost,
+        backlog=backlog,
+        comm_cost=cost,
+        n_cohorts=measured,
+        completed_frac=(int(valid.sum()) / max(measured, 1)),
+        saturated_frac=saturated_frac,
+    )
+
+
+def _device_inputs(topo: Topology, net: NetworkCosts, cpt: _Compact):
+    return dict(
+        U=jnp.asarray(net.U),
+        mu=jnp.asarray(topo.inst_mu, jnp.float32),
+        sel_cmp=jnp.asarray(cpt.sel_cmp),
+        stream_cmp=jnp.asarray(cpt.stream_cmp),
+        valid_cmp=jnp.asarray(cpt.valid),
+        succ_map=jnp.asarray(cpt.succ_map),
+        term_f=jnp.asarray(_terminal_mask(topo)),
+    )
+
+
+def run_cohort_fused(
+    topo: Topology,
+    net: NetworkCosts,
+    inst_container: np.ndarray,
+    actual: np.ndarray,  # (T, I, C) actual arrivals
+    predicted: np.ndarray | None,  # (T, I, C) predicted arrivals (None => perfect)
+    T: int,
+    cfg: SimConfig,
+    warmup: int = 50,
+    drain_margin: int | None = None,
+    age_cap: int = 64,
+) -> CohortResult:
+    """Drop-in fused replacement for :func:`repro.core.cohort.run_cohort_sim`.
+
+    ``age_cap`` bounds the tracked response of any tuple: mass older than
+    ``age_cap`` slots accumulates in the oldest bucket and reports response
+    ``age_cap`` (DESIGN.md §8) — choose it above the largest response the
+    system exhibits (the default comfortably covers the paper's stable
+    operating points; high-V sweeps need more). A too-shallow cap shows up
+    as ``CohortResult.saturated_frac > 0`` (response biased low, one-sided).
+    """
+    if age_cap < 2:
+        raise ValueError(f"age_cap must be >= 2, got {age_cap}")
+    W = cfg.window
+    prob = make_problem(topo, net, inst_container)
+    cpt = _compact(topo)
+    mask = _stream_mask(topo)
+    act, pred, nxt, q_rem0 = _prep_streams(actual, predicted, T, W, cpt, mask)
+    resp_mass, resp_time, backlog, cost, capped, served = _scan_cohort_fused(
+        prob,
+        actual_s=jnp.asarray(act),
+        pred_s=jnp.asarray(pred),
+        nxt_s=jnp.asarray(nxt),
+        q_rem0=jnp.asarray(q_rem0),
+        Vs=jnp.asarray([cfg.V], jnp.float32),
+        betas=jnp.asarray([cfg.beta], jnp.float32),
+        edges=cpt.edges,
+        scheduler=cfg.scheduler,
+        use_pallas=cfg.use_pallas,
+        age_cap=age_cap,
+        n_components=topo.n_components,
+        shared_inputs=True,
+        **_device_inputs(topo, net, cpt),
+    )
+    weights = np.einsum("sic,ic->cs", act, mask)
+    sat = float(capped[0]) / max(float(served[0]), 1e-9)
+    return _aggregate(
+        np.asarray(resp_mass[0]), np.asarray(resp_time[0]), weights, _reachability(topo),
+        np.asarray(backlog[0]), np.asarray(cost[0]), sat, T, W, warmup, drain_margin,
+    )
+
+
+def run_fused_sweep(
+    topo: Topology,
+    net: NetworkCosts,
+    inst_container: np.ndarray,
+    arr_map: dict,  # name -> (actual, predicted|None), from sweep normalization
+    T: int,
+    spec,
+    warmup: int = 50,
+    drain_margin: int | None = None,
+    age_cap: int = 64,
+) -> tuple[list[CohortResult], int]:
+    """Run a whole :class:`repro.core.sweep.SweepSpec` grid on the fused
+    engine: scenarios partition by (scheduler, window, use_pallas) exactly
+    like the JAX engine, and each partition runs as one vmapped scan —
+    response-time grids (Figs. 4/6) compile once per partition instead of
+    looping Python scenarios. Returns (results in grid order, n_batches)."""
+    if age_cap < 2:
+        raise ValueError(f"age_cap must be >= 2, got {age_cap}")
+    scenarios = spec.scenarios()
+    prob = make_problem(topo, net, inst_container)
+    cpt = _compact(topo)
+    mask = _stream_mask(topo)
+    reach = _reachability(topo)
+    dev = _device_inputs(topo, net, cpt)
+
+    groups: dict[tuple, list] = {}
+    for scn in scenarios:
+        groups.setdefault((scn.scheduler, scn.window, scn.use_pallas), []).append(scn)
+
+    results: list[CohortResult | None] = [None] * len(scenarios)
+    for (scheduler, W, use_pallas), group in groups.items():
+        shared = len({scn.arrival for scn in group}) == 1
+        if shared:  # one prep + one weights matrix for the whole partition
+            prepped = [_prep_streams(*arr_map[group[0].arrival], T, W, cpt, mask)]
+            act_s, pred_s, nxt_s, q0_s = (jnp.asarray(x) for x in prepped[0])
+        else:
+            prepped = [_prep_streams(*arr_map[scn.arrival], T, W, cpt, mask)
+                       for scn in group]
+            act_s, pred_s, nxt_s, q0_s = (
+                jnp.asarray(np.stack([p[k] for p in prepped])) for k in range(4)
+            )
+        weights_s = [np.einsum("sic,ic->cs", p[0], mask) for p in prepped]
+        resp_mass, resp_time, backlog, cost, capped, served = _scan_cohort_fused(
+            prob,
+            actual_s=act_s, pred_s=pred_s, nxt_s=nxt_s, q_rem0=q0_s,
+            Vs=jnp.asarray([scn.V for scn in group], jnp.float32),
+            betas=jnp.asarray([scn.beta for scn in group], jnp.float32),
+            edges=cpt.edges, scheduler=scheduler, use_pallas=use_pallas,
+            age_cap=age_cap, n_components=topo.n_components, shared_inputs=shared,
+            **dev,
+        )
+        resp_mass, resp_time, backlog, cost, capped, served = (
+            np.asarray(x) for x in (resp_mass, resp_time, backlog, cost, capped, served)
+        )
+        for s, scn in enumerate(group):
+            sat = float(capped[s]) / max(float(served[s]), 1e-9)
+            results[scn.index] = _aggregate(
+                resp_mass[s], resp_time[s], weights_s[0 if shared else s], reach,
+                backlog[s], cost[s], sat, T, W, warmup, drain_margin,
+            )
+    return results, len(groups)

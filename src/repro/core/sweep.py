@@ -16,11 +16,14 @@ scan overhead N times. Here a sweep is a first-class object:
 * :class:`SweepResult` returns one :class:`SimResult` per scenario, in grid
   order, numerically matching the per-scenario ``run_sim`` loop.
 
-The cohort (discrete-event) engine cannot be ``vmap``-ed — it is a Python
-event loop — so ``engine="cohort"`` runs the same grid through
-:func:`run_cohort_sim` sequentially behind the identical API; figures that
-need exact response times use that path, everything else gets the batched
-one. Adding a new scenario is one more axis value, not another Python loop.
+Response-time grids have two engines behind the same API: the Python cohort
+(discrete-event) engine cannot be ``vmap``-ed — ``engine="cohort"`` runs the
+grid through :func:`run_cohort_sim` sequentially — while
+``engine="cohort-fused"`` (DESIGN.md §8) re-expresses the same semantics as
+age-tagged arrays under ``lax.scan`` and batches each (scheduler, window,
+Pallas) partition exactly like the JAX engine, mis-predicted arrival
+scenarios included. Adding a new scenario is one more axis value, not
+another Python loop.
 """
 from __future__ import annotations
 
@@ -203,32 +206,48 @@ def run_sweep(
     T: int,
     spec: SweepSpec,
     mu: np.ndarray | None = None,
-    engine: str = "jax",  # jax (batched) | cohort (sequential, response times)
+    engine: str = "jax",  # jax (batched) | cohort-fused (batched responses) | cohort
+    engine_opts: dict | None = None,  # cohort engines: warmup / drain_margin / age_cap
 ) -> SweepResult:
     """Run every scenario of ``spec`` and return per-scenario results.
 
     The JAX engine batches all scenarios that share (scheduler, window,
     use_pallas) into one vmapped ``lax.scan``; results agree elementwise with
-    a per-scenario :func:`run_sim` loop. The cohort engine is a sequential
-    fallback with exact response-time semantics.
+    a per-scenario :func:`run_sim` loop. Response-time grids use
+    ``engine="cohort-fused"`` (batched the same way, DESIGN.md §8) or the
+    sequential Python event loop ``engine="cohort"`` (the semantic oracle).
     """
     scenarios = spec.scenarios()
     arr_map = _normalize_arrivals(arrivals, spec)
 
-    if engine == "cohort":
+    if engine in ("cohort", "cohort-fused"):
+        if mu is not None:
+            raise ValueError(f"engine={engine!r} has no mu override; it uses topo.inst_mu")
+        if spec.sharded:
+            raise ValueError(f"engine={engine!r} has no sharded path (DESIGN.md §7)")
+        opts = dict(engine_opts or {})
+        if engine == "cohort-fused":
+            from .cohort_fused import run_fused_sweep
+
+            results, n_batches = run_fused_sweep(
+                topo, net, inst_container, arr_map, T, spec, **opts
+            )
+            return SweepResult(spec, scenarios, results, n_batches=n_batches)
         from .cohort import run_cohort_sim
 
-        if mu is not None:
-            raise ValueError("engine='cohort' has no mu override; it uses topo.inst_mu")
+        opts.pop("age_cap", None)  # the event loop tracks ages exactly
         results = []
         for scn in scenarios:
             actual, predicted = arr_map[scn.arrival]
             results.append(
-                run_cohort_sim(topo, net, inst_container, actual, predicted, T, scn.config())
+                run_cohort_sim(topo, net, inst_container, actual, predicted, T,
+                               scn.config(), **opts)
             )
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
     if engine != "jax":
         raise ValueError(f"unknown engine {engine!r}")
+    if engine_opts:
+        raise ValueError("engine_opts applies to the cohort engines only")
     mispredicted = [a for a in spec.arrival if arr_map[a][1] is not None]
     if mispredicted:
         raise ValueError(

@@ -11,6 +11,7 @@ import os
 
 import jax.numpy as jnp
 
+from .cohort_drain import cohort_drain_call
 from .decode_attention import decode_attention_call
 from .flash_attention import flash_attention_call
 from .potus_price import potus_price_call
@@ -19,7 +20,7 @@ from .ssd_scan import ssd_intra_chunk_call
 
 __all__ = [
     "flash_attention", "decode_attention", "ssd_intra_chunk", "potus_price",
-    "potus_schedule_alloc",
+    "potus_schedule_alloc", "cohort_drain_split",
 ]
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
@@ -56,4 +57,12 @@ def potus_schedule_alloc(U, q_in, q_out, inst_container, inst_comp, edge_mask, g
     return potus_schedule_call(
         U, q_in, q_out, inst_container, inst_comp, edge_mask, gamma, V, beta,
         interpret=_INTERPRET,
+    )
+
+
+def cohort_drain_split(src_ext, shipped, ratio, inst_comp, age_bucket):
+    """Fused segmented drain + proportional target split of the cohort engine
+    (DESIGN.md §8); returns the landing buckets ``land`` (I, Atot)."""
+    return cohort_drain_call(
+        src_ext, shipped, ratio, inst_comp, age_bucket, interpret=_INTERPRET,
     )
