@@ -1,8 +1,13 @@
-"""Shared benchmark scaffolding: the paper's §5.1 experimental setup."""
+"""Shared benchmark scaffolding: the paper's §5.1 experimental setup, plus
+the machine-readable bench-JSON schema shared by every ``BENCH_*.json``
+emitter (``BENCH_cohort.json``, ``BENCH_disruption.json``) so the perf
+trajectory stays diffable across PRs."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -35,6 +40,48 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+# ---------------------------------------------------------------------------
+# machine-readable bench JSON (one schema for every BENCH_*.json)
+# ---------------------------------------------------------------------------
+
+BENCH_JSON_SCHEMA = "repro-bench/v2"
+
+
+def bench_row(
+    section: str,
+    engine: str,
+    scheduler: str,
+    I: int,
+    T: int,
+    wall_s: float,
+    speedup: float = 1.0,
+    scenario: str = "steady",
+    **extra,
+) -> dict:
+    """One row of the shared bench schema. ``speedup`` is the section's
+    headline ratio against its stated baseline (fused vs Python event loop
+    for the cohort sections, POTUS vs the reactive baseline's transient
+    response for the disruption section); ``scenario`` names the workload/
+    disruption case. Extra metric keys ride along untyped."""
+    row = dict(section=section, engine=engine, scheduler=scheduler, I=int(I),
+               T=int(T), wall_s=round(float(wall_s), 4),
+               speedup=round(float(speedup), 2), scenario=scenario)
+    row.update(extra)
+    return row
+
+
+def write_bench_json(default_path: str, env_var: str, rows: list[dict]) -> None:
+    """Dump ``rows`` under the shared schema (path overridable via
+    ``env_var``); silently skips when a section produced no rows."""
+    if not rows:
+        return
+    path = os.environ.get(env_var, default_path)
+    with open(path, "w") as f:
+        json.dump({"schema": BENCH_JSON_SCHEMA, "rows": rows}, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
 
 
 @dataclasses.dataclass

@@ -1,41 +1,30 @@
 """Benchmark driver — one section per paper table/figure plus framework
 microbenchmarks. Prints ``name,us_per_call,derived`` CSV; the cohort-engine
-scaling rows are additionally dumped as machine-readable JSON to
-``BENCH_cohort.json`` (override the path with REPRO_BENCH_COHORT_JSON) so
-the fused-vs-Python perf trajectory is tracked across PRs.
+scaling rows and the disruption-transient rows are additionally dumped as
+machine-readable JSON under one shared schema (``benchmarks/common.py``) to
+``BENCH_cohort.json`` / ``BENCH_disruption.json`` (override the paths with
+REPRO_BENCH_COHORT_JSON / REPRO_BENCH_DISRUPTION_JSON) so the perf
+trajectory is tracked across PRs.
 
 Set REPRO_BENCH_FULL=1 for the full (paper-scale) sweeps.
 """
 from __future__ import annotations
 
-import json
-import os
 import sys
 import time
 
 
-def _dump_cohort_json(systems_bench) -> None:
-    if not systems_bench.COHORT_BENCH:
-        return
-    path = os.environ.get("REPRO_BENCH_COHORT_JSON", "BENCH_cohort.json")
-    payload = {
-        "schema": "cohort-bench/v1",
-        "rows": systems_bench.COHORT_BENCH,  # engine, I, T, wall_s, speedup
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {path} ({len(systems_bench.COHORT_BENCH)} rows)", file=sys.stderr)
-
-
 def main() -> None:
-    from . import paper_figures, systems_bench
+    from . import disruption, paper_figures, systems_bench
+    from .common import write_bench_json
 
     sections = [
         ("fig4", paper_figures.fig4_response_vs_w),
         ("fig5", paper_figures.fig5_backlog_and_cost_vs_v),
         ("fig6ab", paper_figures.fig6ab_predictors),
         ("fig6c", paper_figures.fig6c_misprediction_extremes),
+        ("disruption", disruption.disruption_bench),
+        ("figD", disruption.figd_disruption),
         ("cohort_scale", systems_bench.cohort_scale),
         ("scheduler_scale", systems_bench.scheduler_fastpath),
         ("scheduler_sweep", systems_bench.scheduler_scale),
@@ -55,7 +44,10 @@ def main() -> None:
                 print(row.csv(), flush=True)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
-    _dump_cohort_json(systems_bench)
+    write_bench_json("BENCH_cohort.json", "REPRO_BENCH_COHORT_JSON",
+                     systems_bench.COHORT_BENCH)
+    write_bench_json("BENCH_disruption.json", "REPRO_BENCH_DISRUPTION_JSON",
+                     disruption.DISRUPTION_BENCH)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -27,10 +27,11 @@ from repro.core import (
 )
 from repro.core.topology import Component
 
-from .common import QUICK, SMOKE, Row, timer
+from .common import QUICK, SMOKE, Row, bench_row, timer
 
-# machine-readable cohort-engine perf rows, dumped to BENCH_cohort.json by
-# benchmarks/run.py so the trajectory is tracked across PRs
+# machine-readable cohort-engine perf rows (shared schema, common.bench_row),
+# dumped to BENCH_cohort.json by benchmarks/run.py so the trajectory is
+# tracked across PRs
 COHORT_BENCH: list[dict] = []
 
 
@@ -190,10 +191,9 @@ def cohort_scale() -> list[Row]:
             for engine, dt in (("python", t_py.dt), ("fused", t_fused)):
                 rows.append(Row(f"cohort_scale/{engine}/{sched}/I{I}", dt / T * 1e6,
                                 f"instances={I};T={T};wall_s={dt:.3f}"))
-                COHORT_BENCH.append(dict(
-                    section="cohort_scale", engine=engine, scheduler=sched, I=I, T=T,
-                    wall_s=round(dt, 4),
-                    speedup=round(speedup, 2) if engine == "fused" else 1.0,
+                COHORT_BENCH.append(bench_row(
+                    "cohort_scale", engine, sched, I, T, dt,
+                    speedup=speedup if engine == "fused" else 1.0,
                 ))
             rows.append(Row(f"cohort_scale/speedup/{sched}/I{I}", t_fused / T * 1e6,
                             f"python_s={t_py.dt:.3f};fused_s={t_fused:.3f};"
@@ -228,11 +228,9 @@ def _cohort_grid_row() -> list[Row]:
     t_py = _timed(lambda: run_sweep(topo, net, placement, amap, T, spec,
                                     engine="cohort"))
     n = spec.n_scenarios
-    COHORT_BENCH.append(dict(section="cohort_grid", engine="fused", scheduler="potus",
-                             I=I, T=T, wall_s=round(t_fused, 4),
-                             speedup=round(t_py / t_fused, 2)))
-    COHORT_BENCH.append(dict(section="cohort_grid", engine="python", scheduler="potus",
-                             I=I, T=T, wall_s=round(t_py, 4), speedup=1.0))
+    COHORT_BENCH.append(bench_row("cohort_grid", "fused", "potus", I, T, t_fused,
+                                  speedup=t_py / t_fused))
+    COHORT_BENCH.append(bench_row("cohort_grid", "python", "potus", I, T, t_py))
     return [Row("cohort_scale/grid", t_fused / (n * T) * 1e6,
                 f"scenarios={n};batches=1;fused_s={t_fused:.3f};"
                 f"python_s={t_py:.3f};speedup={t_py / t_fused:.1f}x")]

@@ -9,9 +9,20 @@ from . import prediction
 from .baselines import jsq_schedule, shuffle_schedule
 from .cohort import CohortResult, run_cohort_sim
 from .cohort_fused import run_cohort_fused
+from .events import (
+    EventTrace,
+    FleetEvent,
+    FleetScenario,
+    diurnal_autoscale,
+    flash_straggler,
+    identity_trace,
+    k_failures,
+    random_chaos,
+    rolling_restart,
+)
 from .network import NetworkCosts, container_costs, fat_tree, jellyfish
 from .placement import instance_traffic, t_heron_placement
-from .potus import SchedProblem, make_problem, potus_prices, potus_schedule
+from .potus import SchedProblem, SlotCaps, apply_caps, make_problem, potus_prices, potus_schedule
 from .queues import SimState, effective_qout, init_state, init_state_batch, slot_update
 from .sharded import instance_mesh, run_sim_sharded, sharded_schedule
 from .simulator import SimConfig, SimResult, run_sim, sim_step
@@ -23,7 +34,7 @@ __all__ = [
     "Component", "Topology", "build_topology", "random_apps", "linear_app", "diamond_app",
     "NetworkCosts", "jellyfish", "fat_tree", "container_costs",
     "t_heron_placement", "instance_traffic",
-    "SchedProblem", "make_problem", "potus_prices", "potus_schedule",
+    "SchedProblem", "SlotCaps", "apply_caps", "make_problem", "potus_prices", "potus_schedule",
     "shuffle_schedule", "jsq_schedule",
     "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
     "SimConfig", "SimResult", "run_sim", "sim_step",
@@ -31,4 +42,6 @@ __all__ = [
     "CohortResult", "run_cohort_sim", "run_cohort_fused",
     "Scenario", "SweepSpec", "SweepResult", "run_sweep",
     "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",
+    "FleetEvent", "FleetScenario", "EventTrace", "identity_trace",
+    "rolling_restart", "flash_straggler", "k_failures", "diurnal_autoscale", "random_chaos",
 ]

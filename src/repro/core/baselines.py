@@ -1,10 +1,14 @@
 """Baseline tuple-scheduling schemes (paper §5.1 "Compared Baselines").
 
 ``shuffle_schedule`` is Heron's default: dispatch produced tuples uniformly at
-random among the next component's instances (fluid even split; a stochastic
-multinomial variant is available for the cohort engine). ``jsq_schedule``
-(join-shortest-queue) and ``round_robin_schedule`` are extra context
-baselines. All share the signature of ``potus.potus_schedule``.
+random among the next component's instances — in the fluid model this even
+split is also exactly what a round-robin dispatcher converges to, so the
+shuffle rows double as the RR baseline everywhere they are reported.
+``jsq_schedule`` (join-shortest-queue) is an extra context baseline. All
+share the signature of ``potus.potus_schedule``, including the optional
+``caps`` disruption slot (DESIGN.md §9): both baselines redistribute each
+component's shipment over its *alive* instances only, and a dead source
+ships nothing (its mandatory arrivals are held by the engines, not dropped).
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .potus import SchedProblem
+from .potus import SchedProblem, SlotCaps, apply_caps
 
 __all__ = ["shuffle_schedule", "jsq_schedule"]
 
@@ -36,7 +40,9 @@ def shuffle_schedule(
     must_send: jax.Array,
     V: float = 0.0,
     beta: float = 0.0,
+    caps: SlotCaps | None = None,
 ) -> jax.Array:
+    prob, must_send = apply_caps(prob, must_send, caps)
     ship = _ship_amounts(prob, q_out, must_send)  # (I, C)
     I = q_in.shape[0]
     per_target = jnp.take_along_axis(
@@ -54,15 +60,20 @@ def jsq_schedule(
     must_send: jax.Array,
     V: float = 0.0,
     beta: float = 0.0,
+    caps: SlotCaps | None = None,
 ) -> jax.Array:
     """Join-shortest-queue: each component's shipment goes to its instance
     with the smallest input queue (ties -> lowest index)."""
+    prob, must_send = apply_caps(prob, must_send, caps)
     ship = _ship_amounts(prob, q_out, must_send)  # (I, C)
     I = q_in.shape[0]
     C = prob.n_components
-    # winner[c] = argmin over instances of comp c of q_in
+    # winner[c] = argmin over instances of comp c of q_in (alive only)
     comp_onehot = jax.nn.one_hot(prob.inst_comp, C, dtype=q_in.dtype)  # (I, C)
-    masked_q = jnp.where(comp_onehot > 0, q_in[:, None], jnp.inf)  # (I, C)
+    cand = comp_onehot > 0
+    if caps is not None:
+        cand = cand & (caps.alive > 0.0)[:, None]
+    masked_q = jnp.where(cand, q_in[:, None], jnp.inf)  # (I, C)
     winner = jnp.argmin(masked_q, axis=0)  # (C,)
     target_is_winner = winner[prob.inst_comp] == jnp.arange(I)  # (I,) bool over targets
     per_target = jnp.take_along_axis(ship, prob.inst_comp[None, :].repeat(I, axis=0), axis=1)

@@ -26,6 +26,13 @@ Scheduling decisions come from the same jitted schedulers as the JAX engine
 (`potus_schedule`, `shuffle_schedule`, ...), so both engines exercise one
 implementation of Algorithm 1.
 
+Disruption traces (``core.events``, DESIGN.md §9) are consumed per slot: the
+scheduler is called with the slot's :class:`~repro.core.potus.SlotCaps`
+(dead instances priced out), bolts serve at the slot's effective ``mu``, and
+tuples stranded at a failed bolt keep their cohort keys — their response
+honestly includes the downtime. Mass held *at the spout* (admission backlog)
+is re-tagged to its dispatch slot, the engine's pre-existing attribution.
+
 This event loop is the *semantic oracle*: ``core.cohort_fused`` re-expresses
 the same dynamics as age-tagged arrays under ``lax.scan`` (DESIGN.md §8) and
 is differentially tested against it; use the fused engine for grids and
@@ -60,6 +67,10 @@ class CohortResult:
     # always 0.0 here (the event loop tracks ages exactly); the fused engine
     # (DESIGN.md §8) sets it so callers can tell when age_cap is too shallow
     saturated_frac: float = 0.0
+    # total tuple mass served at terminal bolts over the whole run (warmup
+    # included, phantoms included) — the conservation ledger the disruption
+    # property tests check against injected mass (DESIGN.md §9)
+    completed_mass: float = 0.0
 
 
 class _Fifo:
@@ -111,14 +122,18 @@ def run_cohort_sim(
     cfg: SimConfig,
     warmup: int = 50,
     drain_margin: int | None = None,
+    events=None,  # EventTrace | None — disruption trace (core.events, DESIGN.md §9)
 ) -> CohortResult:
     import jax.numpy as jnp
+
+    from .potus import SlotCaps
 
     W = cfg.window
     if predicted is None:
         predicted = actual
     prob = make_problem(topo, net, inst_container)
     sched = _get_scheduler(cfg.scheduler, cfg.use_pallas)
+    trace = None if events is None else events.prepared(T)
 
     I, C = topo.n_instances, topo.n_components
     inst_comp = topo.inst_comp
@@ -156,6 +171,7 @@ def run_cohort_sim(
 
     backlog_ts = np.zeros(T)
     cost_ts = np.zeros(T)
+    completed_mass = 0.0
     U_dev = jnp.asarray(U)  # hoisted: one host->device transfer, not one per slot
 
     target_split_cache: dict[int, np.ndarray] = {
@@ -187,9 +203,15 @@ def run_cohort_sim(
         for (i, c2), f in q_out.items():
             q_out_arr[i, c2] = f.total
 
+        caps = None
+        if trace is not None:
+            alive_row = jnp.asarray(trace.alive_t[t])
+            caps = SlotCaps(alive=alive_row, row_alive=alive_row,
+                            mu=jnp.asarray(trace.mu_t[t]),
+                            gamma=jnp.asarray(trace.gamma_t[t]))
         X = np.asarray(
             sched(prob, U_dev, jnp.asarray(q_in_arr), jnp.asarray(q_out_arr),
-                  jnp.asarray(must_send), float(cfg.V), float(cfg.beta))
+                  jnp.asarray(must_send), float(cfg.V), float(cfg.beta), caps=caps)
         )
         backlog_ts[t] = q_in_arr.sum() + cfg.beta * q_out_arr.sum()
         cost_ts[t] = float((X * u_pair).sum())
@@ -249,14 +271,16 @@ def run_cohort_sim(
             q_in[j].push(items)
         transit = new_transit
 
+        mu_slot = mu if trace is None else trace.mu_t[t]
         for i, fifo in q_in.items():
-            served = fifo.drain(float(mu[i]))
+            served = fifo.drain(float(mu_slot[i]))
             if not served:
                 continue
             ci = int(inst_comp[i])
             succs = succ_of[ci]
             if len(succs) == 0:  # terminal bolt: completions
                 for key, mass in served.items():
+                    completed_mass += mass
                     acc = resp_acc[key][ci]
                     acc[0] += mass
                     acc[1] += mass * max(t - key[1], 0.0)
@@ -310,4 +334,5 @@ def run_cohort_sim(
         comm_cost=cost_ts,
         n_cohorts=len(measured),
         completed_frac=(n_done / max(len(measured), 1)),
+        completed_mass=completed_mass,
     )

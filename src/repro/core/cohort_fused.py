@@ -62,8 +62,14 @@ import numpy as np
 
 from .cohort import CohortResult
 from .network import NetworkCosts
-from .potus import make_problem
-from .simulator import SimConfig, _get_scheduler, pad_arrivals
+from .potus import caps_for_slot, make_problem
+from .simulator import (
+    SimConfig,
+    _get_scheduler,
+    device_trace,
+    pad_arrivals,
+    stacked_device_traces,
+)
 from .topology import Topology
 
 __all__ = ["run_cohort_fused", "run_fused_sweep", "drain_ages"]
@@ -157,8 +163,19 @@ def _fused_step(
     state,
     xs,
 ):
-    """One slot of the cohort dynamics (mirrors ``core.cohort`` step order)."""
-    act_t, pred_t, new_pred, t = xs
+    """One slot of the cohort dynamics (mirrors ``core.cohort`` step order).
+
+    ``xs`` optionally carries a fifth element — one slot of a disruption
+    trace ``(mu_row, gamma_row, alive_row)`` (DESIGN.md §9). The scheduler
+    then prices dead instances out, bolts serve at the slot's effective
+    ``mu``, and a dead spout's mandatory arrivals flow into the admission
+    backlog (step 5 already retains every unshipped pos-0 remainder, so
+    disruption adds no new mass-loss path: stranded mass holds its age tags
+    — which keep aging through the outage — and re-drains on recovery).
+    """
+    act_t, pred_t, new_pred, t, *ev = xs
+    caps = caps_for_slot(*ev[0]) if ev else None
+    mu = mu if caps is None else caps.mu
     q_rem, admit, q_in_tag, q_out_tag, transit, resp_mass, resp_time = state
     I, S, W1 = q_rem.shape
     C = comp_onehot.shape[1]
@@ -189,7 +206,7 @@ def _fused_step(
     q_out_cmp = jnp.where(is_spout[:, None], q_rem.sum(-1), q_out_tag.sum(-1))
     q_out_arr = to_dense(q_out_cmp)
     must_send = to_dense((q_rem[:, :, 0] + admit) * spout_f[:, None])
-    X = sched(prob, U, q_in_arr, q_out_arr, must_send, V, beta)
+    X = sched(prob, U, q_in_arr, q_out_arr, must_send, V, beta, caps=caps)
     backlog = q_in_arr.sum() + beta * q_out_arr.sum()
     cost = (X * u_pair).sum()
 
@@ -271,7 +288,7 @@ def _fused_step(
 
 
 @partial(jax.jit, static_argnames=("edges", "scheduler", "use_pallas", "age_cap",
-                                   "n_components", "shared_inputs"))
+                                   "n_components", "shared_inputs", "events_shared"))
 def _scan_cohort_fused(
     prob,
     U: jax.Array,  # (K, K)
@@ -287,18 +304,20 @@ def _scan_cohort_fused(
     q_rem0: jax.Array,  # (S?, I, S, W+1) pre-loaded windows, compact
     Vs: jax.Array,  # (S,)
     betas: jax.Array,  # (S,)
+    events_s=None,  # (S?, T, I) (mu_t, gamma_t, alive_t) triple, or None
     edges: tuple = (),
     scheduler: str = "potus",
     use_pallas: bool = False,
     age_cap: int = 64,
     n_components: int = 1,
     shared_inputs: bool = False,
+    events_shared: bool = False,
 ):
     sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
     comp_onehot = jax.nn.one_hot(prob.inst_comp, n_components, dtype=mu.dtype)
 
-    def one(actual, pred, nxt, q0, V, beta):
+    def one(actual, pred, nxt, q0, V, beta, ev):
         T, I, _ = actual.shape
         S = q0.shape[1]
         W1 = q0.shape[-1]
@@ -318,11 +337,16 @@ def _scan_cohort_fused(
             valid_cmp, succ_map, term_f, comp_onehot, age_cap, use_pallas, V, beta,
         )
         xs = (actual, pred, nxt, jnp.arange(T))
+        if ev is not None:
+            xs = xs + (ev,)
         final, (backlog, cost, capped, served) = jax.lax.scan(step, state0, xs)
         return final[-2], final[-1], backlog, cost, capped.sum(), served.sum()
 
-    in_axes = (None, None, None, None, 0, 0) if shared_inputs else (0, 0, 0, 0, 0, 0)
-    return jax.vmap(one, in_axes=in_axes)(actual_s, pred_s, nxt_s, q_rem0, Vs, betas)
+    ev_ax = None if (events_s is None or events_shared) else 0
+    in_axes = ((None, None, None, None, 0, 0) if shared_inputs else (0, 0, 0, 0, 0, 0))
+    return jax.vmap(one, in_axes=in_axes + (ev_ax,))(
+        actual_s, pred_s, nxt_s, q_rem0, Vs, betas, events_s
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +399,7 @@ def _aggregate(
     backlog: np.ndarray,  # (T,)
     cost: np.ndarray,  # (T,)
     saturated_frac: float,  # capped / total terminal completions (whole run)
+    completed_mass: float,  # total terminal-served mass (conservation ledger)
     T: int,
     W: int,
     warmup: int,
@@ -396,6 +421,7 @@ def _aggregate(
             avg_response=nan, p95_response=nan, avg_backlog=avg_backlog,
             avg_cost=avg_cost, backlog=backlog, comm_cost=cost,
             n_cohorts=0, completed_frac=0.0, saturated_frac=saturated_frac,
+            completed_mass=completed_mass,
         )
     entry_ids = np.nonzero(weights[:, lo:hi].sum(axis=1) > 0)[0]  # (E,)
     live = resp_mass[:, lo:hi] > 1e-9  # (C, H)
@@ -425,6 +451,7 @@ def _aggregate(
         n_cohorts=measured,
         completed_frac=(int(valid.sum()) / max(measured, 1)),
         saturated_frac=saturated_frac,
+        completed_mass=completed_mass,
     )
 
 
@@ -451,6 +478,7 @@ def run_cohort_fused(
     warmup: int = 50,
     drain_margin: int | None = None,
     age_cap: int = 64,
+    events=None,  # EventTrace | None — disruption trace (core.events, DESIGN.md §9)
 ) -> CohortResult:
     """Drop-in fused replacement for :func:`repro.core.cohort.run_cohort_sim`.
 
@@ -460,6 +488,8 @@ def run_cohort_fused(
     system exhibits (the default comfortably covers the paper's stable
     operating points; high-V sweeps need more). A too-shallow cap shows up
     as ``CohortResult.saturated_frac > 0`` (response biased low, one-sided).
+    Disruption runs need the cap to also cover the outage length (stranded
+    mass keeps aging while its instance is down).
     """
     if age_cap < 2:
         raise ValueError(f"age_cap must be >= 2, got {age_cap}")
@@ -476,6 +506,8 @@ def run_cohort_fused(
         q_rem0=jnp.asarray(q_rem0),
         Vs=jnp.asarray([cfg.V], jnp.float32),
         betas=jnp.asarray([cfg.beta], jnp.float32),
+        events_s=device_trace(events, T),
+        events_shared=True,
         edges=cpt.edges,
         scheduler=cfg.scheduler,
         use_pallas=cfg.use_pallas,
@@ -488,7 +520,8 @@ def run_cohort_fused(
     sat = float(capped[0]) / max(float(served[0]), 1e-9)
     return _aggregate(
         np.asarray(resp_mass[0]), np.asarray(resp_time[0]), weights, _reachability(topo),
-        np.asarray(backlog[0]), np.asarray(cost[0]), sat, T, W, warmup, drain_margin,
+        np.asarray(backlog[0]), np.asarray(cost[0]), sat, float(served[0]),
+        T, W, warmup, drain_margin,
     )
 
 
@@ -502,27 +535,39 @@ def run_fused_sweep(
     warmup: int = 50,
     drain_margin: int | None = None,
     age_cap: int = 64,
+    events_map: dict | None = None,  # name -> EventTrace|None, from sweep normalization
 ) -> tuple[list[CohortResult], int]:
     """Run a whole :class:`repro.core.sweep.SweepSpec` grid on the fused
-    engine: scenarios partition by (scheduler, window, use_pallas) exactly
-    like the JAX engine, and each partition runs as one vmapped scan —
-    response-time grids (Figs. 4/6) compile once per partition instead of
-    looping Python scenarios. Returns (results in grid order, n_batches)."""
+    engine: scenarios partition by (scheduler, window, use_pallas, and
+    whether they carry a disruption trace) exactly like the JAX engine, and
+    each partition runs as one vmapped scan — response-time grids (Figs.
+    4/6) and disruption grids compile once per partition instead of looping
+    Python scenarios. Returns (results in grid order, n_batches)."""
     if age_cap < 2:
         raise ValueError(f"age_cap must be >= 2, got {age_cap}")
     scenarios = spec.scenarios()
+    # raising lookup, like arr_map: a named trace missing from the map is a
+    # caller error, not an undisturbed run silently labeled as disturbed
+    events_map = {"none": None, **(events_map or {})}
+    missing = [e for e in spec.events if e not in events_map]
+    if missing:
+        raise KeyError(f"spec names event scenarios {missing} not present in events_map")
     prob = make_problem(topo, net, inst_container)
     cpt = _compact(topo)
     mask = _stream_mask(topo)
     reach = _reachability(topo)
     dev = _device_inputs(topo, net, cpt)
 
+    def trace_of(scn):
+        return events_map[getattr(scn, "events", "none")]
+
     groups: dict[tuple, list] = {}
     for scn in scenarios:
-        groups.setdefault((scn.scheduler, scn.window, scn.use_pallas), []).append(scn)
+        key = (scn.scheduler, scn.window, scn.use_pallas, trace_of(scn) is not None)
+        groups.setdefault(key, []).append(scn)
 
     results: list[CohortResult | None] = [None] * len(scenarios)
-    for (scheduler, W, use_pallas), group in groups.items():
+    for (scheduler, W, use_pallas, has_events), group in groups.items():
         shared = len({scn.arrival for scn in group}) == 1
         if shared:  # one prep + one weights matrix for the whole partition
             prepped = [_prep_streams(*arr_map[group[0].arrival], T, W, cpt, mask)]
@@ -534,11 +579,18 @@ def run_fused_sweep(
                 jnp.asarray(np.stack([p[k] for p in prepped])) for k in range(4)
             )
         weights_s = [np.einsum("sic,ic->cs", p[0], mask) for p in prepped]
+        events_s, ev_shared = None, True
+        if has_events:
+            events_s, ev_shared = stacked_device_traces(
+                [getattr(scn, "events", "none") for scn in group],
+                [trace_of(scn) for scn in group], T,
+            )
         resp_mass, resp_time, backlog, cost, capped, served = _scan_cohort_fused(
             prob,
             actual_s=act_s, pred_s=pred_s, nxt_s=nxt_s, q_rem0=q0_s,
             Vs=jnp.asarray([scn.V for scn in group], jnp.float32),
             betas=jnp.asarray([scn.beta for scn in group], jnp.float32),
+            events_s=events_s, events_shared=ev_shared,
             edges=cpt.edges, scheduler=scheduler, use_pallas=use_pallas,
             age_cap=age_cap, n_components=topo.n_components, shared_inputs=shared,
             **dev,
@@ -550,6 +602,6 @@ def run_fused_sweep(
             sat = float(capped[s]) / max(float(served[s]), 1e-9)
             results[scn.index] = _aggregate(
                 resp_mass[s], resp_time[s], weights_s[0 if shared else s], reach,
-                backlog[s], cost[s], sat, T, W, warmup, drain_margin,
+                backlog[s], cost[s], sat, float(served[s]), T, W, warmup, drain_margin,
             )
     return results, len(groups)

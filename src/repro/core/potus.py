@@ -32,6 +32,15 @@ The scheduler is *fluid* (float tuple counts). On integral inputs the greedy
 allocations stay integral except for the even-split mandatory dispatch; the
 exact integer oracle lives in ``core.reference`` and the two are compared in
 tests.
+
+Disruption traces (``core.events``, DESIGN.md §9) enter through the optional
+``caps`` argument: a :class:`SlotCaps` of per-slot liveness and effective
+capacities. :func:`apply_caps` folds it into the static problem — dead
+instances' price columns go +inf (masked out of ``edge_mask``), their rows
+get zero transmission budget, and the mandatory even-split divides over the
+*alive* instances of the successor component — so every execution path
+(sort, loop, Pallas, sharded) prices disruptions out with no special cases.
+With an identity trace the fold is numerically a no-op (bit-identical X).
 """
 from __future__ import annotations
 
@@ -45,7 +54,7 @@ import numpy as np
 from .network import NetworkCosts
 from .topology import Topology
 
-__all__ = ["SchedProblem", "potus_prices", "potus_schedule", "make_problem"]
+__all__ = ["SchedProblem", "SlotCaps", "apply_caps", "potus_prices", "potus_schedule", "make_problem"]
 
 _INF = jnp.inf
 
@@ -63,6 +72,66 @@ class SchedProblem:
     is_spout: jax.Array  # (I,) bool
     max_succ: int = dataclasses.field(metadata=dict(static=True))
     n_components: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlotCaps:
+    """One slot of a disruption trace (``core.events``, DESIGN.md §9).
+
+    ``alive`` is always the *global* (I,) liveness vector — it masks decision
+    columns and sizes the alive-instance counts — while ``row_alive``, ``mu``
+    and ``gamma`` are shaped like the caller's decision rows (the full I rows
+    on the dense path, this shard's rows under ``core.sharded``). ``mu`` and
+    ``gamma`` are the effective capacities of ``EventTrace`` (already zero
+    where dead).
+    """
+
+    alive: jax.Array  # (I,) f32 0/1 — global liveness (decision columns)
+    row_alive: jax.Array  # (R,) f32 0/1 — liveness of the caller's rows
+    mu: jax.Array  # (R,) f32 — effective processing capacity
+    gamma: jax.Array  # (R,) f32 — effective transmission capacity
+
+
+def caps_for_slot(mu_row: jax.Array, gamma_row: jax.Array, alive_row: jax.Array) -> SlotCaps:
+    """Dense-path caps: rows and columns are the same I instances."""
+    return SlotCaps(alive=alive_row, row_alive=alive_row, mu=mu_row, gamma=gamma_row)
+
+
+def apply_caps(
+    prob: SchedProblem, must_send: jax.Array, caps: SlotCaps | None
+) -> tuple[SchedProblem, jax.Array]:
+    """Fold a disruption slot into the scheduling problem (DESIGN.md §9).
+
+    Dead targets leave ``edge_mask`` (their prices become +inf on every
+    path, Pallas included), dead sources get ``gamma = 0`` and their
+    mandatory dispatch is cancelled (the arrivals are held, not dropped —
+    the engines carry them as admission backlog), and ``comp_count``
+    becomes the per-component *alive* instance count so the even-split of
+    eq. (4) lands on live instances only. With an all-alive slot every fold
+    is numerically exact (``& True``, ``* 1.0``, integer recount), so an
+    identity trace is bit-transparent.
+    """
+    if caps is None:
+        return prob, must_send
+    alive_cols = caps.alive > 0.0
+    comp_count = jnp.zeros_like(prob.comp_count).at[prob.inst_comp].add(caps.alive)
+    prob = dataclasses.replace(
+        prob,
+        edge_mask=prob.edge_mask & alive_cols[None, :],
+        gamma=caps.gamma,
+        comp_count=comp_count,
+    )
+    return prob, must_send * caps.row_alive[:, None]
+
+
+def hold_mask_for(prob: SchedProblem, caps: SlotCaps) -> jax.Array:
+    """(R, C) — 1 on streams whose mandatory arrivals cannot ship this slot
+    (dead source row, or successor component with no alive instance); the
+    engines hold those tuples instead of dropping them (DESIGN.md §9)."""
+    comp_alive = jnp.zeros_like(prob.comp_count).at[prob.inst_comp].add(caps.alive)
+    dead_comp = (comp_alive <= 0.0).astype(caps.alive.dtype)  # (C,)
+    return jnp.clip((1.0 - caps.row_alive)[:, None] + dead_comp[None, :], 0.0, 1.0)
 
 
 def make_problem(topo: Topology, net: NetworkCosts, inst_container: np.ndarray) -> SchedProblem:
@@ -233,14 +302,17 @@ def potus_schedule(
     beta: float,
     use_pallas: bool = False,
     method: str = "sort",
+    caps: SlotCaps | None = None,
 ) -> jax.Array:
     """One slot of Algorithm 1 for every instance. Returns X (I, I).
 
     ``method="sort"`` is the water-fill fast path, ``"loop"`` the reference
     argmin loop; with ``use_pallas=True`` the sort path runs the fused
     Pallas schedule kernel (prices and allocation in one kernel), while the
-    loop path keeps using the standalone Pallas price kernel.
+    loop path keeps using the standalone Pallas price kernel. ``caps``
+    applies one slot of a disruption trace (DESIGN.md §9) on every path.
     """
+    prob, must_send = apply_caps(prob, must_send, caps)
     if use_pallas and method == "sort":
         from repro.kernels import ops as kops
 

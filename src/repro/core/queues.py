@@ -77,6 +77,7 @@ def slot_update_rows(
     selectivity_rows: jax.Array,  # (R, C) — selectivity[comp(i), :]
     is_spout: jax.Array,  # (R,)
     comp_onehot: jax.Array,  # (I, C) — one-hot component of each *column*
+    hold_mask: jax.Array | None = None,  # (R, C) 1 where pos-0 leftovers must be held
 ) -> tuple[SimState, dict[str, jax.Array]]:
     """Per-slot dynamics for a block of rows (paper eqs. (2)-(10)).
 
@@ -84,6 +85,15 @@ def slot_update_rows(
     instance are column sums of the *global* decision matrix, which the dense
     path computes directly and the sharded path reduces with a ``psum``
     across row shards (DESIGN.md §7).
+
+    Without disruptions eq. (4) guarantees the w=0 window slice is fully
+    dispatched, so the shifted-out position is empty. Under an event trace a
+    dead spout (or a successor component with no alive instance) cannot ship,
+    and dropping the remainder would destroy tuples — ``hold_mask`` marks
+    those streams and their pos-0 leftover is carried into the next slot's
+    current position instead (admission-backlog semantics, matching the
+    cohort engines; DESIGN.md §9). An all-alive slot has ``hold_mask == 0``
+    everywhere, which is numerically a no-op.
     """
     shipped = X @ comp_onehot  # (R, C) tuples leaving i toward component c
 
@@ -91,7 +101,10 @@ def slot_update_rows(
     cum_before = jnp.cumsum(state.q_rem, axis=-1) - state.q_rem
     drained = jnp.clip(shipped[:, :, None] - cum_before, 0.0, state.q_rem)
     q_rem = state.q_rem - drained
+    leftover = q_rem[..., 0]  # (R, C) pos-0 remainder about to shift out
     q_rem = jnp.concatenate([q_rem[..., 1:], new_arrivals[..., None]], axis=-1)
+    if hold_mask is not None:
+        q_rem = q_rem.at[..., 0].add(leftover * hold_mask)
     q_rem = q_rem * is_spout[:, None, None]
 
     # --- bolts: arrivals from X(t-1), service, emission --------------------
@@ -118,9 +131,10 @@ def slot_update(
     new_arrivals: jax.Array,  # (I, C) — λ(t + W + 1), entering the window
     mu: jax.Array,  # (I,) processing capacity this slot
     selectivity_rows: jax.Array,  # (I, C) — selectivity[comp(i), :]
+    hold_mask: jax.Array | None = None,  # (I, C) — see slot_update_rows
 ) -> tuple[SimState, dict[str, jax.Array]]:
     comp_onehot = jax.nn.one_hot(prob.inst_comp, prob.n_components, dtype=X.dtype)
     return slot_update_rows(
         state, X, X.sum(axis=0), new_arrivals, mu, selectivity_rows,
-        prob.is_spout, comp_onehot,
+        prob.is_spout, comp_onehot, hold_mask=hold_mask,
     )

@@ -36,7 +36,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed.context import shard_map_compat
 
 from .network import NetworkCosts
-from .potus import SchedProblem, _allocate_rows, _mandatory_dispatch, _price_rows, make_problem
+from .potus import (
+    SchedProblem,
+    SlotCaps,
+    _allocate_rows,
+    _mandatory_dispatch,
+    _price_rows,
+    apply_caps,
+    hold_mask_for,
+    make_problem,
+)
 from .queues import SimState, effective_qout, init_state, slot_update_rows
 from .topology import Topology
 
@@ -79,9 +88,14 @@ def _local_rows(full: jax.Array, n_local: int) -> jax.Array:
     return jax.lax.dynamic_slice_in_dim(full, start, n_local)
 
 
-def _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method):
-    """Algorithm 1 for this shard's rows; returns X rows (I_loc, I)."""
+def _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method, caps=None):
+    """Algorithm 1 for this shard's rows; returns X rows (I_loc, I).
+
+    ``caps`` carries a disruption slot with row-shaped ``gamma``/``mu``
+    (this shard's rows) and the *global* ``alive`` vector (every shard masks
+    the full column set identically; DESIGN.md §9)."""
     n_local = q_out.shape[0]
+    prob, must_send = apply_caps(prob, must_send, caps)
     kc_rows = _local_rows(prob.inst_container, n_local)
     u_pair = U[kc_rows[:, None], prob.inst_container[None, :]]  # (I_loc, I)
     l = _price_rows(u_pair, q_in_full, q_out, prob.inst_comp, prob.edge_mask, V, beta)
@@ -122,21 +136,32 @@ def sharded_schedule(
     )(prob, U, q_in, q_out, must_send)
 
 
-def _local_sim_step(prob, U, mu, selectivity_rows, V, beta, state, new_arr, method):
+def _local_sim_step(prob, U, mu, selectivity_rows, V, beta, state, new_arr,
+                    mu_row=None, gamma_row=None, alive_full=None, *, method):
     """One slot of the §3 dynamics on this shard's rows (cf. ``sim_step``)."""
+    n_local = state.q_in.shape[0]
+    if alive_full is None:
+        caps = None
+    else:
+        caps = SlotCaps(alive=alive_full, row_alive=_local_rows(alive_full, n_local),
+                        mu=mu_row, gamma=gamma_row)
     q_in_full = jax.lax.all_gather(state.q_in, _AXIS, tiled=True)
     q_out = effective_qout(prob, state)  # all inputs row-local: works per shard
     must_send = state.q_rem[:, :, 0]
-    x, u_pair = _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method)
+    x, u_pair = _local_schedule(prob, U, q_in_full, q_out, must_send, V, beta, method,
+                                caps=caps)
 
     h = jax.lax.psum(state.q_in.sum() + beta * q_out.sum(), _AXIS)  # h(t), eq. (12)
     cost = jax.lax.psum((x * u_pair).sum(), _AXIS)  # Theta(t), eq. (11)
 
     col_sums = jax.lax.psum(x.sum(axis=0), _AXIS)  # (I,) tuples landing everywhere
-    landing = _local_rows(col_sums, state.q_in.shape[0])
+    landing = _local_rows(col_sums, n_local)
     comp_onehot = jax.nn.one_hot(prob.inst_comp, prob.n_components, dtype=x.dtype)
+    mu_eff = mu if caps is None else caps.mu
+    hold = None if caps is None else hold_mask_for(prob, caps)
     new_state, info = slot_update_rows(
-        state, x, landing, new_arr, mu, selectivity_rows, prob.is_spout, comp_onehot
+        state, x, landing, new_arr, mu_eff, selectivity_rows, prob.is_spout, comp_onehot,
+        hold_mask=hold,
     )
     metrics = (
         h,
@@ -159,22 +184,32 @@ def _scan_sim_sharded(
     selectivity_rows: jax.Array,
     V: float,
     beta: float,
+    events=None,  # (mu_t, gamma_t, alive_t) triple of (T, I), or None
     method: str = "sort",
 ):
+    base_specs = (
+        _prob_specs(prob), P(None, None), P(_AXIS), P(_AXIS, None), P(), P(),
+        _STATE_SPECS, P(_AXIS, None),
+    )
+    # per-slot capacity rows shard with the rows; liveness is replicated
+    # (every shard masks the full column set — DESIGN.md §9)
+    ev_specs = () if events is None else (P(_AXIS), P(_AXIS), P(None))
     step = shard_map_compat(
         partial(_local_sim_step, method=method),
         mesh=mesh,
-        in_specs=(
-            _prob_specs(prob), P(None, None), P(_AXIS), P(_AXIS, None), P(), P(),
-            _STATE_SPECS, P(_AXIS, None),
-        ),
+        in_specs=base_specs + ev_specs,
         out_specs=(_STATE_SPECS, (P(), P(), P(), P(), P())),
     )
 
-    def body(state, new_arr):
-        return step(prob, U, mu, selectivity_rows, V, beta, state, new_arr)
+    def body(state, xs):
+        if events is None:
+            return step(prob, U, mu, selectivity_rows, V, beta, state, xs)
+        new_arr, (mu_row, gamma_row, alive_row) = xs
+        return step(prob, U, mu, selectivity_rows, V, beta, state, new_arr,
+                    mu_row, gamma_row, alive_row)
 
-    final, (h, cost, qi, qo, served) = jax.lax.scan(body, state0, arrivals)
+    xs = arrivals if events is None else (arrivals, events)
+    final, (h, cost, qi, qo, served) = jax.lax.scan(body, state0, xs)
     return final, h, cost, qi, qo, served
 
 
@@ -187,9 +222,12 @@ def run_sim_sharded(
     cfg,  # SimConfig
     mu: np.ndarray | None = None,
     mesh: Mesh | None = None,
+    events=None,  # EventTrace | None — disruption trace (DESIGN.md §9)
 ):
     """`run_sim` semantics on an instance-partitioned mesh (DESIGN.md §7)."""
-    from .simulator import SimResult, pad_arrivals  # local import: avoid cycle
+    from .simulator import SimResult, _check_mu_override, pad_arrivals  # local import: avoid cycle
+
+    _check_mu_override(mu, events)
 
     W = cfg.window
     arrivals = pad_arrivals(arrivals, T + W + 1)
@@ -215,9 +253,19 @@ def run_sim_sharded(
     method = "loop" if cfg.scheduler == "potus-loop" else "sort"
     if cfg.scheduler not in ("potus", "potus-loop"):
         raise ValueError(f"sharded engine only runs POTUS, got {cfg.scheduler!r}")
+    ev = None
+    if events is not None:
+        from .simulator import device_trace  # local import: avoid cycle
+
+        mu_t, gamma_t, alive_t = device_trace(events, T)
+        ev = (
+            jax.device_put(mu_t, named(mesh, P(None, _AXIS))),
+            jax.device_put(gamma_t, named(mesh, P(None, _AXIS))),
+            jax.device_put(alive_t, named(mesh, P(None, None))),
+        )
     final, h, cost, qi, qo, served = _scan_sim_sharded(
         mesh, prob, state0, window_stream, jnp.asarray(net.U), mu_arr, sel_rows,
-        float(cfg.V), float(cfg.beta), method=method,
+        float(cfg.V), float(cfg.beta), events=ev, method=method,
     )
     return SimResult(
         backlog=np.asarray(h),

@@ -21,13 +21,52 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .events import EventTrace
 from .network import NetworkCosts
-from .potus import SchedProblem, make_problem, potus_schedule
+from .potus import SchedProblem, SlotCaps, caps_for_slot, hold_mask_for, make_problem, potus_schedule
 from .queues import SimState, effective_qout, init_state, slot_update
 from .sharded import run_sim_sharded
 from .topology import Topology
 
-__all__ = ["SimResult", "run_sim", "SimConfig", "sim_step", "pad_arrivals"]
+__all__ = ["SimResult", "run_sim", "SimConfig", "sim_step", "pad_arrivals", "device_trace"]
+
+
+def device_trace(events: EventTrace | None, T: int):
+    """Events as scan inputs: a (mu_t, gamma_t, alive_t) triple of (T, I)
+    device arrays sized to ``T``, or None for the undisturbed fast path."""
+    if events is None:
+        return None
+    ev = events.prepared(T)
+    return (
+        jnp.asarray(ev.mu_t, jnp.float32),
+        jnp.asarray(ev.gamma_t, jnp.float32),
+        jnp.asarray(ev.alive_t, jnp.float32),
+    )
+
+
+def stacked_device_traces(names, traces, T: int):
+    """(events_s, events_shared) for one scenario batch: a single device
+    trace when every scenario names the same trace, else the three tensors
+    stacked to (S, T, I) for the vmap axis. Shared by the JAX-engine and
+    cohort-fused sweep partitions so they batch events identically."""
+    if len(set(names)) == 1:
+        return device_trace(traces[0], T), True
+    dev = [device_trace(tr, T) for tr in traces]
+    return tuple(jnp.stack([d[k] for d in dev]) for k in range(3)), False
+
+
+def _check_mu_override(mu, events) -> None:
+    """A custom ``mu`` and an events trace both claim the service-rate axis:
+    ``EventTrace.mu_t`` is compiled from ``topo.inst_mu``, so it would
+    silently override the override. Refuse the combination (compile the
+    trace against the custom fleet instead — build the ``EventTrace`` from
+    a ``Topology`` carrying the intended ``inst_mu``)."""
+    if mu is not None and events is not None:
+        raise ValueError(
+            "mu override and events trace are mutually exclusive: the trace's "
+            "mu_t is compiled from topo.inst_mu and would shadow the override "
+            "(compile the EventTrace against a Topology with the custom mu)"
+        )
 
 
 def pad_arrivals(arrivals: np.ndarray, n: int) -> np.ndarray:
@@ -96,18 +135,25 @@ def sim_step(
     beta: jax.Array,  # scalar — may be traced
     state: SimState,
     new_arr: jax.Array,  # (I, C) — λ(t + W + 1) entering the window
+    caps: SlotCaps | None = None,  # one slot of a disruption trace (DESIGN.md §9)
 ) -> tuple[SimState, tuple[jax.Array, ...]]:
     """One slot of the paper-§3 dynamics: observe, schedule, update.
 
-    Everything that varies per scenario (state, arrivals, V, beta) is an
-    explicit argument so the step can be ``vmap``-ed over a scenario axis.
+    Everything that varies per scenario (state, arrivals, V, beta, the
+    disruption slot ``caps``) is an explicit argument so the step can be
+    ``vmap``-ed over a scenario axis. With ``caps`` the scheduler prices
+    dead instances out, service runs at the slot's effective ``mu``, and
+    unshippable mandatory arrivals are held (never dropped).
     """
     q_out = effective_qout(prob, state)
     must_send = state.q_rem[:, :, 0]
-    X = sched(prob, U, state.q_in, q_out, must_send, V, beta)
+    X = sched(prob, U, state.q_in, q_out, must_send, V, beta, caps=caps)
     h = state.q_in.sum() + beta * q_out.sum()  # h(t), eq. (12)
     cost = (X * u_pair).sum()  # Theta(t), eq. (11)
-    new_state, info = slot_update(prob, state, X, new_arr, mu, selectivity_rows)
+    mu_eff = mu if caps is None else caps.mu
+    hold = None if caps is None else hold_mask_for(prob, caps)
+    new_state, info = slot_update(prob, state, X, new_arr, mu_eff, selectivity_rows,
+                                  hold_mask=hold)
     metrics = (h, cost, state.q_in.sum(), q_out.sum(), info["served"].sum())
     return new_state, metrics
 
@@ -122,16 +168,24 @@ def _scan_sim(
     selectivity_rows: jax.Array,  # (I, C)
     V: float,
     beta: float,
+    events=None,  # (mu_t, gamma_t, alive_t) triple of (T, I), or None
     scheduler: str = "potus",
     use_pallas: bool = False,
 ):
     sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
 
-    def step(state, new_arr):
-        return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta, state, new_arr)
+    def step(state, xs):
+        if events is None:
+            new_arr, caps = xs, None
+        else:
+            new_arr, (mu_row, gamma_row, alive_row) = xs
+            caps = caps_for_slot(mu_row, gamma_row, alive_row)
+        return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta,
+                        state, new_arr, caps=caps)
 
-    final, (h, cost, qi, qo, served) = jax.lax.scan(step, state0, arrivals)
+    xs = arrivals if events is None else (arrivals, events)
+    final, (h, cost, qi, qo, served) = jax.lax.scan(step, state0, xs)
     return final, h, cost, qi, qo, served
 
 
@@ -143,11 +197,14 @@ def run_sim(
     T: int,
     cfg: SimConfig,
     mu: np.ndarray | None = None,
+    events: EventTrace | None = None,  # disruption trace (core.events, DESIGN.md §9)
 ) -> SimResult:
+    _check_mu_override(mu, events)
     if cfg.sharded:
         if cfg.use_pallas:
             raise ValueError("sharded engine has no Pallas path yet (use one or the other)")
-        return run_sim_sharded(topo, net, inst_container, arrivals, T, cfg, mu=mu)
+        return run_sim_sharded(topo, net, inst_container, arrivals, T, cfg, mu=mu,
+                               events=events)
     W = cfg.window
     arrivals = pad_arrivals(arrivals, T + W + 1)
     prob = make_problem(topo, net, inst_container)
@@ -165,6 +222,7 @@ def run_sim(
         sel_rows,
         float(cfg.V),
         float(cfg.beta),
+        events=device_trace(events, T),
         scheduler=cfg.scheduler,
         use_pallas=cfg.use_pallas,
     )

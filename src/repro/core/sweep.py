@@ -36,10 +36,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .events import EventTrace, FleetScenario
 from .network import NetworkCosts
-from .potus import make_problem
+from .potus import caps_for_slot, make_problem
 from .queues import init_state, init_state_batch
-from .simulator import SimConfig, SimResult, _get_scheduler, pad_arrivals, run_sim, sim_step
+from .simulator import (
+    SimConfig,
+    SimResult,
+    _check_mu_override,
+    _get_scheduler,
+    pad_arrivals,
+    run_sim,
+    sim_step,
+    stacked_device_traces,
+)
 from .topology import Topology
 
 __all__ = ["Scenario", "SweepSpec", "SweepResult", "run_sweep"]
@@ -57,6 +67,7 @@ class Scenario:
     arrival: str
     use_pallas: bool = False
     sharded: bool = False
+    events: str = "none"  # named disruption trace (core.events, DESIGN.md §9)
 
     def config(self) -> SimConfig:
         return SimConfig(
@@ -86,7 +97,9 @@ class SweepSpec:
 
     ``window``, ``scheduler`` and ``use_pallas`` change the *compiled
     structure* (state shapes / traced scheduler), so they partition the grid;
-    V, beta and the arrival scenario vary inside one compiled batch.
+    V, beta, the arrival scenario and the named disruption trace (``events``,
+    core.events) vary inside one compiled batch — the undisturbed ``"none"``
+    trace keeps the legacy no-events fast path.
     """
 
     V: tuple = (3.0,)
@@ -94,11 +107,12 @@ class SweepSpec:
     window: tuple = (0,)
     scheduler: tuple = ("potus",)
     arrival: tuple = ("default",)
+    events: tuple = ("none",)
     use_pallas: bool = False
     sharded: bool = False
 
     def __post_init__(self):
-        for axis in ("V", "beta", "window", "scheduler", "arrival"):
+        for axis in ("V", "beta", "window", "scheduler", "arrival", "events"):
             object.__setattr__(self, axis, _as_tuple(getattr(self, axis)))
         for flag in ("use_pallas", "sharded"):
             if not isinstance(getattr(self, flag), bool):
@@ -112,16 +126,18 @@ class SweepSpec:
     def n_scenarios(self) -> int:
         return (
             len(self.V) * len(self.beta) * len(self.window)
-            * len(self.scheduler) * len(self.arrival)
+            * len(self.scheduler) * len(self.arrival) * len(self.events)
         )
 
     def scenarios(self) -> list[Scenario]:
-        """Grid order: arrival, scheduler, window, beta outermost; V innermost."""
+        """Grid order: events, arrival, scheduler, window, beta outermost;
+        V innermost."""
         return [
             Scenario(idx, float(V), float(beta), int(W), sched, arr,
-                     self.use_pallas, self.sharded)
-            for idx, (arr, sched, W, beta, V) in enumerate(
-                itertools.product(self.arrival, self.scheduler, self.window, self.beta, self.V)
+                     self.use_pallas, self.sharded, events=ev)
+            for idx, (ev, arr, sched, W, beta, V) in enumerate(
+                itertools.product(self.events, self.arrival, self.scheduler,
+                                  self.window, self.beta, self.V)
             )
         ]
 
@@ -151,7 +167,8 @@ class SweepResult:
         return hits[0][1]
 
 
-@partial(jax.jit, static_argnames=("scheduler", "use_pallas", "shared_inputs"))
+@partial(jax.jit, static_argnames=("scheduler", "use_pallas", "shared_inputs",
+                                   "events_shared"))
 def _scan_sweep(
     prob,
     states0,  # SimState pytree, leading scenario axis S (unbatched if shared)
@@ -161,23 +178,33 @@ def _scan_sweep(
     selectivity_rows: jax.Array,  # (I, C)
     Vs: jax.Array,  # (S,)
     betas: jax.Array,  # (S,)
+    events_s=None,  # (S?, T, I) (mu_t, gamma_t, alive_t) triple, or None
     scheduler: str = "potus",
     use_pallas: bool = False,
     shared_inputs: bool = False,
+    events_shared: bool = False,
 ):
     sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
 
-    def one(state0, stream, V, beta):
-        def step(state, new_arr):
-            return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta, state, new_arr)
+    def one(state0, stream, V, beta, ev):
+        def step(state, xs):
+            if ev is None:
+                new_arr, caps = xs, None
+            else:
+                new_arr, (mu_row, gamma_row, alive_row) = xs
+                caps = caps_for_slot(mu_row, gamma_row, alive_row)
+            return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta,
+                            state, new_arr, caps=caps)
 
-        return jax.lax.scan(step, state0, stream)
+        xs = stream if ev is None else (stream, ev)
+        return jax.lax.scan(step, state0, xs)
 
     # when every scenario in the batch shares one arrival tensor (a pure
     # V/beta sweep), scan a single stream instead of S stacked copies
-    in_axes = (None, None, 0, 0) if shared_inputs else (0, 0, 0, 0)
-    return jax.vmap(one, in_axes=in_axes)(states0, streams, Vs, betas)
+    ev_ax = None if (events_s is None or events_shared) else 0
+    in_axes = ((None, None, 0, 0) if shared_inputs else (0, 0, 0, 0)) + (ev_ax,)
+    return jax.vmap(one, in_axes=in_axes)(states0, streams, Vs, betas, events_s)
 
 
 def _normalize_arrivals(arrivals, spec: SweepSpec) -> dict[str, tuple[np.ndarray, np.ndarray | None]]:
@@ -198,6 +225,28 @@ def _normalize_arrivals(arrivals, spec: SweepSpec) -> dict[str, tuple[np.ndarray
     return out
 
 
+def _normalize_events(
+    events, spec: SweepSpec, topo: Topology, T: int, inst_container: np.ndarray
+) -> dict[str, EventTrace | None]:
+    """name -> EventTrace|None. ``"none"`` is always the undisturbed fleet;
+    :class:`FleetScenario` values are compiled here (with the placement
+    vector, so container-level outages resolve)."""
+    out: dict[str, EventTrace | None] = {"none": None}
+    for name, val in (events or {}).items():
+        if val is None:
+            out[name] = None
+        elif isinstance(val, FleetScenario):
+            out[name] = val.compile(topo, T, placement=inst_container)
+        elif isinstance(val, EventTrace):
+            out[name] = val
+        else:
+            raise TypeError(f"events[{name!r}] must be FleetScenario | EventTrace | None")
+    missing = [e for e in spec.events if e not in out]
+    if missing:
+        raise KeyError(f"spec names event scenarios {missing} not present in events")
+    return out
+
+
 def run_sweep(
     topo: Topology,
     net: NetworkCosts,
@@ -208,17 +257,21 @@ def run_sweep(
     mu: np.ndarray | None = None,
     engine: str = "jax",  # jax (batched) | cohort-fused (batched responses) | cohort
     engine_opts: dict | None = None,  # cohort engines: warmup / drain_margin / age_cap
+    events=None,  # dict[str, FleetScenario | EventTrace | None] for spec.events
 ) -> SweepResult:
     """Run every scenario of ``spec`` and return per-scenario results.
 
     The JAX engine batches all scenarios that share (scheduler, window,
-    use_pallas) into one vmapped ``lax.scan``; results agree elementwise with
-    a per-scenario :func:`run_sim` loop. Response-time grids use
-    ``engine="cohort-fused"`` (batched the same way, DESIGN.md §8) or the
-    sequential Python event loop ``engine="cohort"`` (the semantic oracle).
+    use_pallas, events-or-not) into one vmapped ``lax.scan``; results agree
+    elementwise with a per-scenario :func:`run_sim` loop. Response-time
+    grids use ``engine="cohort-fused"`` (batched the same way, DESIGN.md §8)
+    or the sequential Python event loop ``engine="cohort"`` (the semantic
+    oracle). Named disruption traces (``spec.events`` / the ``events`` map,
+    core.events) form one more scenario axis on every engine.
     """
     scenarios = spec.scenarios()
     arr_map = _normalize_arrivals(arrivals, spec)
+    ev_map = _normalize_events(events, spec, topo, T, inst_container)
 
     if engine in ("cohort", "cohort-fused"):
         if mu is not None:
@@ -230,7 +283,7 @@ def run_sweep(
             from .cohort_fused import run_fused_sweep
 
             results, n_batches = run_fused_sweep(
-                topo, net, inst_container, arr_map, T, spec, **opts
+                topo, net, inst_container, arr_map, T, spec, events_map=ev_map, **opts
             )
             return SweepResult(spec, scenarios, results, n_batches=n_batches)
         from .cohort import run_cohort_sim
@@ -241,13 +294,16 @@ def run_sweep(
             actual, predicted = arr_map[scn.arrival]
             results.append(
                 run_cohort_sim(topo, net, inst_container, actual, predicted, T,
-                               scn.config(), **opts)
+                               scn.config(), events=ev_map[scn.events], **opts)
             )
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
     if engine != "jax":
         raise ValueError(f"unknown engine {engine!r}")
     if engine_opts:
         raise ValueError("engine_opts applies to the cohort engines only")
+    active_traces = [t for t in (ev_map[scn.events] for scn in scenarios) if t is not None]
+    if active_traces:
+        _check_mu_override(mu, active_traces[0])
     mispredicted = [a for a in spec.arrival if arr_map[a][1] is not None]
     if mispredicted:
         raise ValueError(
@@ -261,7 +317,7 @@ def run_sweep(
         # scenarios, not wide grids) — run the grid sequentially (DESIGN.md §7)
         results = [
             run_sim(topo, net, inst_container, arr_map[scn.arrival][0], T,
-                    scn.config(), mu=mu)
+                    scn.config(), mu=mu, events=ev_map[scn.events])
             for scn in scenarios
         ]
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
@@ -271,13 +327,16 @@ def run_sweep(
     sel_rows = jnp.asarray(topo.selectivity[topo.inst_comp], jnp.float32)
     U = jnp.asarray(net.U)
 
-    # partition by the axes that change compiled structure
+    # partition by the axes that change compiled structure; scenarios with a
+    # disruption trace scan extra per-slot inputs, so they batch separately
+    # from the undisturbed fast path
     groups: dict[tuple, list[Scenario]] = {}
     for scn in scenarios:
-        groups.setdefault((scn.scheduler, scn.window, scn.use_pallas), []).append(scn)
+        key = (scn.scheduler, scn.window, scn.use_pallas, ev_map[scn.events] is not None)
+        groups.setdefault(key, []).append(scn)
 
     results: list[SimResult | None] = [None] * len(scenarios)
-    for (scheduler, W, use_pallas), group in groups.items():
+    for (scheduler, W, use_pallas, has_events), group in groups.items():
         shared = len({scn.arrival for scn in group}) == 1
         if shared:
             p = pad_arrivals(arr_map[group[0].arrival][0].astype(np.float32, copy=False), T + W + 1)
@@ -296,9 +355,15 @@ def run_sweep(
             states0 = init_state_batch(topo, W, prefixes)
         Vs = jnp.asarray([scn.V for scn in group], jnp.float32)
         betas = jnp.asarray([scn.beta for scn in group], jnp.float32)
+        events_s, ev_shared = None, True
+        if has_events:
+            events_s, ev_shared = stacked_device_traces(
+                [scn.events for scn in group], [ev_map[scn.events] for scn in group], T
+            )
 
         final, (h, cost, qi, qo, served) = _scan_sweep(
             prob, states0, streams, U, mu_arr, sel_rows, Vs, betas,
+            events_s=events_s, events_shared=ev_shared,
             scheduler=scheduler, use_pallas=use_pallas, shared_inputs=shared,
         )
         h, cost, qi, qo, served = (np.asarray(x) for x in (h, cost, qi, qo, served))

@@ -85,21 +85,24 @@ def moe_ffn(p, x, cfg, router_state=None):
     pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (N*k, E)
     pos = pos_in_e.sum(axis=-1)  # (N*k,)
     keep = pos < cap
-    slot = jnp.where(keep, flat_e * cap + pos, E * cap)  # E*cap = trash slot
+    slot = jnp.where(keep, flat_e * cap + pos, E * cap)  # E*cap = out of bounds
 
+    # dropped tokens scatter/gather out of bounds (mode="drop"/"fill") so the
+    # dispatch buffers stay exactly (E*cap, D): a +1 "trash row" makes the
+    # leading dim indivisible by the mesh axes and GSPMD's padded-shard
+    # lowering of the gather returns wrong values for in-range rows under TP
+    # (dloss ~0.07 on the 2x4-mesh train step; tests/test_distributed.py)
     token_idx = jnp.repeat(jnp.arange(N), k)
-    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].set(xf[token_idx])
-    expert_in = buf[:-1].reshape(E, cap, D)
+    buf = jnp.zeros((E * cap, D), x.dtype).at[slot].set(xf[token_idx], mode="drop")
+    expert_in = buf.reshape(E, cap, D)
 
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) * jnp.einsum(
         "ecd,edf->ecf", expert_in, p["w_up"]
     )
     expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, cap, D)
 
-    out_flat = jnp.concatenate(
-        [expert_out.reshape(E * cap, D), jnp.zeros((1, D), x.dtype)], axis=0
-    )
-    y_tok = out_flat[slot]  # (N*k, D); dropped tokens -> 0
+    out_flat = expert_out.reshape(E * cap, D)
+    y_tok = out_flat.at[slot].get(mode="fill", fill_value=0)  # (N*k, D); dropped -> 0
     y = (y_tok.reshape(N, k, D) * top_w[..., None].astype(x.dtype)).sum(axis=1)
 
     if cfg.n_shared_experts:

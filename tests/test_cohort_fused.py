@@ -22,6 +22,8 @@ import pytest
 
 from repro.core import (
     Component,
+    FleetEvent,
+    FleetScenario,
     SimConfig,
     SweepSpec,
     build_topology,
@@ -117,6 +119,81 @@ class TestExactDyadic:
         # differently (oldest-source-slot-first vs push-order FIFO, §8)
         assert fu.avg_response == pytest.approx(py.avg_response, rel=0.05, abs=0.05)
         assert fu.p95_response == pytest.approx(py.p95_response, rel=0.10, abs=0.2)
+
+
+def _dyadic_trace(topo, T):
+    """A disruption trace that PRESERVES dyadic arithmetic: alive counts per
+    component stay powers of two (kill 2 of comp 2's 4 instances), and
+    straggler/throttle factors are 0.5 — so the bitwise differential tier
+    extends across the events axis (DESIGN.md §9)."""
+    right = topo.instances_of(2)  # app0 "right", parallelism 4
+    mid = topo.instances_of(5)  # app1 "mid", parallelism 4
+    return FleetScenario((
+        FleetEvent("failure", 40, 90, instances=(int(right[0]), int(right[1]))),
+        FleetEvent("failure", 120, 160, instances=(int(mid[0]), int(mid[1]))),
+        FleetEvent("straggler", 60, 140, instances=(int(mid[2]),), factor=0.5),
+        FleetEvent("throttle", 30, 100, instances=(int(topo.instances_of(1)[0]),),
+                   factor=0.5),
+    ), name="dyadic-chaos").compile(topo, T)
+
+
+class TestExactDyadicEvents:
+    """The §8 differential tiers extended across an events axis: with a
+    dyadicity-preserving disruption trace the Python event loop and the
+    fused engine must still produce bit-comparable trajectories."""
+
+    @pytest.mark.parametrize("scheduler", ["shuffle", "jsq"])
+    @pytest.mark.parametrize("window", [0, 2])
+    def test_trajectories_bit_identical_under_disruption(
+            self, dyadic_system, scheduler, window):
+        topo, net, placement = dyadic_system
+        arr = _pow2_arrivals(topo, 300 + 16, seed=3)
+        trace = _dyadic_trace(topo, 300)
+        cfg = SimConfig(V=2.0, beta=0.5, window=window, scheduler=scheduler)
+        py = run_cohort_sim(topo, net, placement, arr, None, 300, cfg, events=trace)
+        fu = run_cohort_fused(topo, net, placement, arr, None, 300, cfg,
+                              events=trace, age_cap=128)
+        np.testing.assert_array_equal(fu.backlog, py.backlog)
+        np.testing.assert_array_equal(fu.comm_cost, py.comm_cost)
+        assert fu.avg_response == pytest.approx(py.avg_response, rel=0.05, abs=0.05)
+        assert fu.n_cohorts == py.n_cohorts
+        assert fu.completed_mass == pytest.approx(py.completed_mass, rel=1e-5)
+
+    @pytest.mark.parametrize("window", [0, 2])
+    def test_potus_means_agree_under_disruption(self, dyadic_system, window):
+        """POTUS' drain-split ratio (X/shipped) is non-dyadic, and the
+        disruption-grown queues push its price comparisons through f64-vs-f32
+        near-ties (the module-docstring chaos floor) — so under events POTUS
+        gets the statistical treatment even on the dyadic system."""
+        topo, net, placement = dyadic_system
+        arr = _pow2_arrivals(topo, 300 + 16, seed=3)
+        trace = _dyadic_trace(topo, 300)
+        cfg = SimConfig(V=2.0, beta=0.5, window=window)
+        py = run_cohort_sim(topo, net, placement, arr, None, 300, cfg, events=trace)
+        fu = run_cohort_fused(topo, net, placement, arr, None, 300, cfg,
+                              events=trace, age_cap=128)
+        assert fu.avg_backlog == pytest.approx(py.avg_backlog, rel=0.05)
+        assert fu.avg_cost == pytest.approx(py.avg_cost, rel=0.05)
+        assert fu.avg_response == pytest.approx(py.avg_response, rel=0.10)
+        assert fu.completed_mass == pytest.approx(py.completed_mass, rel=1e-3)
+
+    def test_fused_sweep_events_axis_matches_per_scenario(self, dyadic_system):
+        topo, net, placement = dyadic_system
+        Tg = 120
+        arr = _pow2_arrivals(topo, Tg + 16, seed=3)
+        trace = _dyadic_trace(topo, Tg)
+        spec = SweepSpec(V=(1.0, 2.0), window=(0, 2), events=("none", "chaos"))
+        sw = run_sweep(topo, net, placement, arr, Tg, spec, engine="cohort-fused",
+                       events={"chaos": trace})
+        assert len(sw) == 8
+        assert sw.n_batches == 4  # (window, events) partitions
+        for scn, res in sw:
+            ev = None if scn.events == "none" else trace
+            ref = run_cohort_fused(topo, net, placement, arr, None, Tg,
+                                   scn.config(), events=ev)
+            np.testing.assert_allclose(res.backlog, ref.backlog, rtol=1e-6, atol=1e-4)
+            np.testing.assert_allclose(res.comm_cost, ref.comm_cost, rtol=1e-6,
+                                       atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

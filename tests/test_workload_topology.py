@@ -1,0 +1,143 @@
+"""Generator contracts for ``core.workload`` / ``core.topology`` —
+previously only exercised indirectly through the simulators.
+
+* ``feasible_rates`` — the returned spout rates drive NO resource past the
+  stated utilization: per-instance processing load, spout egress, and bolt
+  egress are all bounded by ``u`` times the resource's capacity, and the
+  busiest resource sits exactly at ``u`` (the scaling is tight, not merely
+  safe).
+* ``random_apps`` — every generated DAG is acyclic with a single layer-0
+  spout per app, at least one terminal, forward-only in-app edges, and
+  flow-conserving fan-out selectivities; parallelism/mu stay in the
+  requested ranges.
+
+Deterministic seeded grids always run; the hypothesis properties widen the
+same checks over random generator parameters when hypothesis is installed
+(the nightly guarantees it).
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_topology, feasible_rates, random_apps
+from repro.core.topology import topo_order
+from repro.core.workload import spout_rate_matrix
+
+
+def _resource_utilizations(topo, rates):
+    """(processing per instance, egress per instance) utilizations,
+    re-derived from first principles: propagate expected processed rates
+    down the DAG, divide each component's throughput evenly over its
+    instances, and compare against mu / gamma."""
+    C = topo.n_components
+    through = topo.expected_rates(rates)  # (C,) processed rate per component
+    proc, egress = [], []
+    for c in range(C):
+        inst = topo.instances_of(c)
+        if topo.comp_is_spout[c]:
+            for i in inst:
+                egress.append(rates[i].sum() / topo.inst_gamma[i])
+        else:
+            per_inst = through[c] / len(inst)
+            out_rate = through[c] * topo.selectivity[c].sum() / len(inst)
+            for i in inst:
+                proc.append(per_inst / topo.inst_mu[i])
+                egress.append(out_rate / topo.inst_gamma[i])
+    return np.array(proc), np.array(egress)
+
+
+def _check_feasible(topo, utilization):
+    rates = feasible_rates(topo, utilization=utilization)
+    proc, egress = _resource_utilizations(topo, rates)
+    tol = 1e-6
+    assert (proc <= utilization + tol).all(), proc.max()
+    assert (egress <= utilization + tol).all(), egress.max()
+    # tight: the busiest resource is AT the target, not merely below it
+    busiest = max(proc.max(initial=0.0), egress.max(initial=0.0))
+    assert busiest == pytest.approx(utilization, rel=1e-5)
+    assert (rates >= 0).all()
+
+
+def _check_apps(apps, parallelism_range, mu_range):
+    topo = build_topology(apps)  # raises on cycles already
+    order = topo_order(topo.adj)  # and explicitly: a topological order exists
+    assert len(order) == topo.n_components
+    assert not topo.adj.diagonal().any()  # no self loops
+    base = 0
+    for comps in apps:
+        ids = range(base, base + len(comps))
+        spouts = [c for c in ids if topo.comp_is_spout[c]]
+        assert len(spouts) == 1  # layer 0 is the single spout
+        assert not topo.adj[:, spouts[0]].any()  # nothing feeds the spout
+        terminals = [c for c in ids if not topo.adj[c].any()]
+        assert terminals
+        # edges stay within the app
+        for c in ids:
+            for c2 in np.nonzero(topo.adj[c])[0]:
+                assert c2 in ids
+        base += len(comps)
+    for comps in apps:
+        for comp in comps:
+            assert parallelism_range[0] <= comp.parallelism <= parallelism_range[1]
+            if not comp.is_spout:
+                assert mu_range[0] <= comp.proc_capacity <= mu_range[1]
+            if comp.successors:  # flow-conserving fan-out
+                assert sum(comp.selectivity) == pytest.approx(1.0)
+    # spouts never process
+    assert (topo.inst_mu[topo.spout_instances] == 0.0).all()
+
+
+class TestSeededGrids:
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("utilization", [0.3, 0.7, 0.95])
+    def test_feasible_rates_never_exceed_utilization(self, seed, utilization):
+        rng = np.random.default_rng(seed)
+        topo = build_topology(random_apps(rng), gamma=float(rng.integers(4, 32)))
+        _check_feasible(topo, utilization)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_apps_structure(self, seed):
+        rng = np.random.default_rng(seed)
+        pr, mr = (2, 4), (3.0, 5.0)
+        apps = random_apps(rng, parallelism_range=pr, mu_range=mr)
+        _check_apps(apps, pr, mr)
+
+    def test_spout_rate_matrix_hits_streams_only(self):
+        rng = np.random.default_rng(0)
+        topo = build_topology(random_apps(rng))
+        m = spout_rate_matrix(topo, 2.5)
+        stream = topo.adj[topo.inst_comp] & topo.comp_is_spout[topo.inst_comp][:, None]
+        assert (m[stream] == 2.5).all()
+        assert (m[~stream] == 0.0).all()
+
+
+class TestHypothesisProperties:
+    def test_property_feasible_rates_and_dag_structure(self):
+        pytest.importorskip(
+            "hypothesis", reason="hypothesis not installed (pip install -e .[test])"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        @given(
+            seed=st.integers(0, 10_000),
+            n_apps=st.integers(1, 6),
+            depth_lo=st.integers(2, 4),
+            depth_span=st.integers(0, 3),
+            par_lo=st.integers(1, 3),
+            par_span=st.integers(0, 3),
+            gamma=st.floats(2.0, 64.0),
+            utilization=st.floats(0.05, 0.99),
+        )
+        @settings(max_examples=60, deadline=None)
+        def check(seed, n_apps, depth_lo, depth_span, par_lo, par_span, gamma,
+                  utilization):
+            rng = np.random.default_rng(seed)
+            depth_range = (depth_lo, depth_lo + depth_span)
+            pr = (par_lo, par_lo + par_span)
+            comps_range = (depth_range[1], depth_range[1] + 3)
+            apps = random_apps(rng, n_apps=n_apps, depth_range=depth_range,
+                               comps_range=comps_range, parallelism_range=pr)
+            _check_apps(apps, pr, (3.0, 5.0))
+            topo = build_topology(apps, gamma=gamma)
+            _check_feasible(topo, utilization)
+
+        check()
