@@ -2,9 +2,9 @@
 microbenchmarks. Prints ``name,us_per_call,derived`` CSV; the cohort-engine
 scaling rows and the disruption-transient rows are additionally dumped as
 machine-readable JSON under one shared schema (``benchmarks/common.py``) to
-``BENCH_cohort.json`` / ``BENCH_disruption.json`` (override the paths with
-REPRO_BENCH_COHORT_JSON / REPRO_BENCH_DISRUPTION_JSON) so the perf
-trajectory is tracked across PRs.
+``BENCH_cohort.json`` / ``BENCH_disruption.json`` / ``BENCH_serving.json``
+(override the paths with REPRO_BENCH_COHORT_JSON / REPRO_BENCH_DISRUPTION_JSON
+/ REPRO_BENCH_SERVING_JSON) so the perf trajectory is tracked across PRs.
 
 Set REPRO_BENCH_FULL=1 for the full (paper-scale) sweeps.
 """
@@ -15,7 +15,7 @@ import time
 
 
 def main() -> None:
-    from . import disruption, paper_figures, systems_bench
+    from . import disruption, paper_figures, serving_fleet, systems_bench
     from .common import write_bench_json
 
     sections = [
@@ -31,6 +31,7 @@ def main() -> None:
         ("kernels", systems_bench.kernels_micro),
         ("moe_router", systems_bench.moe_router_bench),
         ("dispatcher", systems_bench.dispatcher_bench),
+        ("serving_fleet", serving_fleet.serving_fleet_bench),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
@@ -48,6 +49,8 @@ def main() -> None:
                      systems_bench.COHORT_BENCH)
     write_bench_json("BENCH_disruption.json", "REPRO_BENCH_DISRUPTION_JSON",
                      disruption.DISRUPTION_BENCH)
+    write_bench_json("BENCH_serving.json", "REPRO_BENCH_SERVING_JSON",
+                     serving_fleet.SERVING_BENCH)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

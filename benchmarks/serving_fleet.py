@@ -1,0 +1,197 @@
+"""Serving-fleet benchmark (DESIGN.md §10): POTUS dispatching an inference
+fleet vs Shuffle / JSQ, steady-state and through a k-replica failure.
+
+A ``ReplicaFleet`` of token-accounting ``SimReplica`` backends (heterogeneous
+rates: alternating fast/slow, the VRAMancer-style mixed fleet) is driven
+request-by-request by ``PotusDispatcher`` with ``integral_assign`` routing;
+baselines run the same driver with ``cfg.scheduler`` swapped, so every policy
+pays identical bookkeeping. Requests carry sampled token lengths; per-request
+latency is measured submission-to-completion in scheduler slots.
+
+Offered load keeps the *slow* replicas under even-split utilization 0.75, so
+every policy — Shuffle included — is steady-state stable and the disruption
+metric is meaningful. The k-failure scenario kills the fast half of the
+fleet for a sixth of the horizon: surviving capacity drops to half the
+offered load, the fleet backs up, and recovery behavior separates the
+policies. The headline is p95 *degradation* (disturbed minus steady p95 at
+the same fleet size): backlog-aware POTUS steers post-outage arrivals to the
+recovered fast replicas while the stranded slow-replica queues drain at full
+rate, whereas blind even-splitting (Shuffle) keeps feeding the backlogged
+survivors at ~0.75 utilization and their queues take an order of magnitude
+longer to clear — so POTUS's p95 degrades less. ``speedup`` on the ``kfail``
+rows is shuffle's degradation over POTUS's at the same R.
+
+JSQ is the cautionary baseline at scale: with no transfer-cost term, every
+frontend chases the same globally-shortest queue each slot and the fleet
+degenerates to a rotating hot spot (its R=64 steady p95 is ~8x POTUS's).
+POTUS's V*U rack term is what prevents that herding — see ``_fleet_setup``.
+
+Emits ``BENCH_serving.json`` (repro-bench/v2 schema, ``benchmarks/common.py``)
+with tokens/sec + p95-latency rows for POTUS/shuffle/JSQ at R in {4, 16, 64}.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.events import FleetEvent, FleetScenario
+from repro.serving.dispatcher import DispatcherConfig, PotusDispatcher, integral_assign
+from repro.serving.fleet import FleetRequest, ReplicaFleet, SimReplica
+
+from .common import SMOKE, T_COHORT, Row, bench_row, timer
+
+# machine-readable rows for BENCH_serving.json (written by benchmarks/run.py)
+SERVING_BENCH: list[dict] = []
+
+FAST_TOK, SLOW_TOK = 8.0, 4.0  # tokens/slot per replica class
+MEAN_TOKENS = 4.0  # mean request length (tokens in {2..6})
+SCHEDULERS = ("potus", "shuffle", "jsq")
+FLEET_SIZES = (4, 16, 64)
+DRAIN_SLOTS = 400  # post-arrival slots to let every request finish
+
+
+def _fleet_setup(R: int, scheduler: str):
+    """F = R/8 frontends + R alternating fast/slow replicas, 2 replicas/host,
+    on a racked fabric: one rack per frontend, replica hosts round-robined
+    across racks (cost 1 in-rack, 2 cross-rack).
+
+    Rack locality matters for the all-to-cheapest fluid policies: with a flat
+    cost matrix every frontend prices the *same* replica cheapest each slot
+    and the fleet degenerates to a rotating one-replica hot spot; with
+    per-frontend locality the V*U term keeps concurrent batches in distinct
+    racks while Q_in feedback balances within them.
+    """
+    F = max(2, R // 8)
+    rates = np.where(np.arange(R) % 2 == 0, FAST_TOK, SLOW_TOK).astype(np.float32)
+    hosts = F + (R + 1) // 2
+    rack = np.concatenate([np.arange(F), np.arange(hosts - F) % F])
+    host_costs = np.where(rack[:, None] == rack[None, :], 1.0, 2.0).astype(np.float32)
+    np.fill_diagonal(host_costs, 0.0)
+    # V at the scale of one slot's per-frontend batch: prices compare V*U
+    # against the q_out term (~ lam_f requests), so this keeps the locality
+    # and backlog terms commensurate at every fleet size — small enough that
+    # the greedy still chases empty replicas at recovery, large enough that
+    # cross-rack herding needs a real (batch-sized) backlog imbalance
+    lam_f = 0.75 * SLOW_TOK * R / MEAN_TOKENS / F
+    disp = PotusDispatcher(
+        n_frontends=F,
+        replica_hosts=F + np.arange(R) // 2,
+        frontend_hosts=np.arange(F),
+        host_costs=host_costs,
+        replica_rates=rates,
+        cfg=DispatcherConfig(V=lam_f, beta=1.0, gamma=float(8 * R),
+                             tokens_per_request=MEAN_TOKENS, scheduler=scheduler),
+    )
+    fleet = ReplicaFleet([SimReplica(float(r), max_batch=1 << 20) for r in rates])
+    return disp, fleet
+
+
+def _kfail_trace(disp, R: int, T: int):
+    """Kill the fast half of the fleet for T//6 slots starting at T//3:
+    survivors then carry ~1.5x their capacity, so the outage actually backs
+    the system up and recovery routing is what the metric measures."""
+    fast = tuple(int(disp.F + r) for r in range(R) if r % 2 == 0)
+    scn = FleetScenario(
+        (FleetEvent("failure", T // 3, T // 3 + max(T // 6, 4), instances=fast),),
+        name=f"k{len(fast)}-fast-failure",
+    )
+    return scn.compile(disp.topo, T + DRAIN_SLOTS)
+
+
+def _drive(R: int, scheduler: str, scenario: str, T: int, seed: int = 7):
+    """Run one configuration; returns (metrics dict, wall seconds)."""
+    rng = np.random.default_rng(seed)
+    disp, fleet = _fleet_setup(R, scheduler)
+    trace = None if scenario == "steady" else _kfail_trace(disp, R, T)
+    # per-replica even-split load = 0.75 * SLOW_TOK: stable for every policy
+    # (~half of total capacity); the k-failure halves capacity below load
+    lam = 0.75 * SLOW_TOK * R / MEAN_TOKENS / disp.F
+    queues: list[list[FleetRequest]] = [[] for _ in range(disp.F)]
+    finished: list[FleetRequest] = []
+    rid = 0
+    with timer() as tm:
+        for t in range(T + DRAIN_SLOTS):
+            arrivals = np.zeros(disp.F, np.float32)
+            if t < T:
+                for f in range(disp.F):
+                    n = int(rng.poisson(lam))
+                    arrivals[f] = n
+                    for _ in range(n):
+                        tok = float(rng.integers(2, 7))
+                        queues[f].append(FleetRequest(rid, tok, t, frontend=f))
+                        rid += 1
+            ev_row = None
+            mu_row = alive_row = None
+            if trace is not None:
+                ev_row = (trace.mu_t[t], trace.gamma_t[t], trace.alive_t[t])
+                mu_row = trace.mu_t[t][disp.F:]
+                alive_row = trace.alive_t[t][disp.F:]
+            assign = integral_assign(
+                disp.route(arrivals, fleet.backlog_tokens, events_row=ev_row), rng=rng)
+            for f in range(disp.F):
+                for r in range(R):
+                    for _ in range(int(assign[f, r])):
+                        if not queues[f]:
+                            break
+                        fleet.dispatch(r, queues[f].pop(0))
+            finished.extend(fleet.step(t, mu_row=mu_row, alive_row=alive_row))
+            if t >= T and not any(queues) and fleet.backlog_tokens.sum() == 0.0:
+                break
+    lat = np.array([r.finished - r.submitted for r in finished], np.float64)
+    n_total = rid
+    metrics = dict(
+        tokens_per_slot=fleet.tokens_served / max(t + 1, 1),
+        tokens_per_sec=fleet.tokens_served / max(tm.dt, 1e-9),
+        p95_latency_slots=float(np.percentile(lat, 95)) if len(lat) else float("nan"),
+        avg_latency_slots=float(lat.mean()) if len(lat) else float("nan"),
+        completed_frac=len(finished) / max(n_total, 1),
+        slots_run=int(t + 1),
+    )
+    return metrics, tm.dt
+
+
+def serving_fleet_bench():
+    """POTUS vs shuffle vs JSQ over fleet sizes, steady + k-failure."""
+    T = T_COHORT
+    sizes = FLEET_SIZES if not SMOKE else FLEET_SIZES[:2]
+    results: dict[tuple, dict] = {}
+    walls: dict[tuple, float] = {}
+    for R in sizes:
+        for scenario in ("steady", "kfail"):
+            for sched in SCHEDULERS:
+                m, wall = _drive(R, sched, scenario, T)
+                results[(R, scenario, sched)] = m
+                walls[(R, scenario, sched)] = wall
+    rows = []
+    for R in sizes:
+        degs = {
+            sched: results[(R, "kfail", sched)]["p95_latency_slots"]
+            - results[(R, "steady", sched)]["p95_latency_slots"]
+            for sched in SCHEDULERS
+        }
+        for scenario in ("steady", "kfail"):
+            for sched in SCHEDULERS:
+                m = results[(R, scenario, sched)]
+                wall = walls[(R, scenario, sched)]
+                speedup = 1.0
+                extra = {}
+                if scenario == "kfail":
+                    extra["p95_degradation_slots"] = round(degs[sched], 3)
+                    if sched != "potus" and degs[sched] > 0 and degs["potus"] > 0:
+                        speedup = degs[sched] / degs["potus"]
+                SERVING_BENCH.append(bench_row(
+                    "serving_fleet", "fleet-sim", sched, I=R, T=T, wall_s=wall,
+                    speedup=speedup, scenario=scenario,
+                    tokens_per_slot=round(m["tokens_per_slot"], 2),
+                    tokens_per_sec=round(m["tokens_per_sec"], 1),
+                    p95_latency_slots=round(m["p95_latency_slots"], 2),
+                    avg_latency_slots=round(m["avg_latency_slots"], 3),
+                    completed_frac=round(m["completed_frac"], 4),
+                    **extra,
+                ))
+                us = wall / max(m["slots_run"], 1) * 1e6
+                rows.append(Row(
+                    f"serving/{sched}-R{R}-{scenario}", us,
+                    f"tok/slot={m['tokens_per_slot']:.1f} "
+                    f"p95={m['p95_latency_slots']:.1f}sl",
+                ))
+    return rows

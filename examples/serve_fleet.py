@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model_zoo
-from repro.serving.dispatcher import DispatcherConfig, PotusDispatcher
+from repro.serving.dispatcher import DispatcherConfig, PotusDispatcher, integral_assign
 from repro.serving.engine import Request, ServingEngine
 
 RATES = [4.0, 2.0, 1.0]  # replica 2 is a straggler
@@ -39,8 +39,9 @@ def run(policy: str, cfg, params, T: int = 40) -> str:
         if t < T:
             n_new = int(rng.poisson(1.5))
             if policy == "potus":
-                assign = disp.route(np.array([float(n_new)]),
-                                    np.array([e.backlog_tokens for e in engines]))
+                assign = integral_assign(disp.route(
+                    np.array([float(n_new)]),
+                    np.array([e.backlog_tokens for e in engines])))
                 targets = [r for r in range(3) for _ in range(int(assign[0, r]))][:n_new]
                 while len(targets) < n_new:  # integer rounding remainder
                     targets.append(int(np.argmin([e.backlog_tokens for e in engines])))

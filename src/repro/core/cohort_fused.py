@@ -150,6 +150,7 @@ def _fused_step(
     U: jax.Array,  # (K, K)
     u_pair: jax.Array,  # (I, I)
     mu: jax.Array,  # (I,)
+    inv_service: jax.Array,  # (I,) 1/service-time; converts mu to tuples/slot
     sel_cmp: jax.Array,  # (I, S)
     stream_cmp: jax.Array,  # (I, S)
     valid_cmp: jax.Array,  # (I, S)
@@ -172,10 +173,16 @@ def _fused_step(
     backlog (step 5 already retains every unshipped pos-0 remainder, so
     disruption adds no new mass-loss path: stranded mass holds its age tags
     — which keep aging through the outage — and re-drains on recovery).
+
+    ``inv_service`` is the token-length service-time axis (DESIGN.md §10):
+    ``mu`` stays in raw capacity units (e.g. tokens/slot) while queues count
+    tuples, and each slot a bolt completes ``mu[i] / service[i]`` tuples.
+    All-ones is bit-transparent; event-trace ``mu_t`` rows stay in the same
+    raw units and get the same conversion.
     """
     act_t, pred_t, new_pred, t, *ev = xs
     caps = caps_for_slot(*ev[0]) if ev else None
-    mu = mu if caps is None else caps.mu
+    mu = (mu if caps is None else caps.mu) * inv_service
     q_rem, admit, q_in_tag, q_out_tag, transit, resp_mass, resp_time = state
     I, S, W1 = q_rem.shape
     C = comp_onehot.shape[1]
@@ -293,6 +300,7 @@ def _scan_cohort_fused(
     prob,
     U: jax.Array,  # (K, K)
     mu: jax.Array,  # (I,)
+    inv_service: jax.Array,  # (I,)
     sel_cmp: jax.Array,  # (I, S)
     stream_cmp: jax.Array,  # (I, S)
     valid_cmp: jax.Array,  # (I, S)
@@ -333,8 +341,9 @@ def _scan_cohort_fused(
             jnp.zeros((n_components, S_acc), mu.dtype),
         )
         step = partial(
-            _fused_step, prob, sched, edges, U, u_pair, mu, sel_cmp, stream_cmp,
-            valid_cmp, succ_map, term_f, comp_onehot, age_cap, use_pallas, V, beta,
+            _fused_step, prob, sched, edges, U, u_pair, mu, inv_service, sel_cmp,
+            stream_cmp, valid_cmp, succ_map, term_f, comp_onehot, age_cap, use_pallas,
+            V, beta,
         )
         xs = (actual, pred, nxt, jnp.arange(T))
         if ev is not None:
@@ -455,10 +464,18 @@ def _aggregate(
     )
 
 
-def _device_inputs(topo: Topology, net: NetworkCosts, cpt: _Compact):
+def _device_inputs(topo: Topology, net: NetworkCosts, cpt: _Compact, service=None):
+    if service is None:
+        inv_service = jnp.ones(topo.n_instances, jnp.float32)
+    else:
+        svc = np.broadcast_to(np.asarray(service, np.float32), (topo.n_instances,))
+        if (svc <= 0).any():
+            raise ValueError("service times must be positive")
+        inv_service = jnp.asarray(1.0 / svc)
     return dict(
         U=jnp.asarray(net.U),
         mu=jnp.asarray(topo.inst_mu, jnp.float32),
+        inv_service=inv_service,
         sel_cmp=jnp.asarray(cpt.sel_cmp),
         stream_cmp=jnp.asarray(cpt.stream_cmp),
         valid_cmp=jnp.asarray(cpt.valid),
@@ -479,8 +496,17 @@ def run_cohort_fused(
     drain_margin: int | None = None,
     age_cap: int = 64,
     events=None,  # EventTrace | None — disruption trace (core.events, DESIGN.md §9)
+    service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
 ) -> CohortResult:
     """Drop-in fused replacement for :func:`repro.core.cohort.run_cohort_sim`.
+
+    ``service`` adds the token-length service-time axis: ``topo.inst_mu``
+    (and event-trace ``mu_t`` rows) stay in raw capacity units — tokens/slot
+    for a serving fleet — and each bolt instance completes
+    ``mu[i] / service[i]`` tuples per slot. This is how a request trace runs
+    unchanged on both a :class:`repro.serving.fleet.ReplicaFleet` and this
+    in-graph oracle (``engine_opts={"service": ...}`` through
+    ``run_sweep``).
 
     ``age_cap`` bounds the tracked response of any tuple: mass older than
     ``age_cap`` slots accumulates in the oldest bucket and reports response
@@ -514,7 +540,7 @@ def run_cohort_fused(
         age_cap=age_cap,
         n_components=topo.n_components,
         shared_inputs=True,
-        **_device_inputs(topo, net, cpt),
+        **_device_inputs(topo, net, cpt, service),
     )
     weights = np.einsum("sic,ic->cs", act, mask)
     sat = float(capped[0]) / max(float(served[0]), 1e-9)
@@ -536,6 +562,7 @@ def run_fused_sweep(
     drain_margin: int | None = None,
     age_cap: int = 64,
     events_map: dict | None = None,  # name -> EventTrace|None, from sweep normalization
+    service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
 ) -> tuple[list[CohortResult], int]:
     """Run a whole :class:`repro.core.sweep.SweepSpec` grid on the fused
     engine: scenarios partition by (scheduler, window, use_pallas, and
@@ -556,7 +583,7 @@ def run_fused_sweep(
     cpt = _compact(topo)
     mask = _stream_mask(topo)
     reach = _reachability(topo)
-    dev = _device_inputs(topo, net, cpt)
+    dev = _device_inputs(topo, net, cpt, service)
 
     def trace_of(scn):
         return events_map[getattr(scn, "events", "none")]

@@ -23,6 +23,12 @@ identity sharding and agrees elementwise with `core.simulator.run_sim`
 (tested). ``SimConfig(sharded=True)`` / ``SweepSpec(sharded=True)`` route
 through here; meshes come from the largest instance-count divisor of the
 available device count (`instance_mesh`).
+
+The serving-fleet path (DESIGN.md §10) extends the 1-D instance mesh to a
+2-D ``(batch, instance)`` mesh (`fleet_mesh`): `sharded_schedule_batch` runs
+a batch of independent dispatcher slots with rows still sharded along
+``"i"`` and the batch spread along ``"b"`` — batch entries never
+communicate, so fleet-scale what-if grids scale to devices = nb × ni.
 """
 from __future__ import annotations
 
@@ -49,9 +55,13 @@ from .potus import (
 from .queues import SimState, effective_qout, init_state, slot_update_rows
 from .topology import Topology
 
-__all__ = ["instance_mesh", "sharded_schedule", "run_sim_sharded"]
+__all__ = [
+    "instance_mesh", "fleet_mesh", "sharded_schedule", "sharded_schedule_batch",
+    "run_sim_sharded",
+]
 
 _AXIS = "i"
+_BATCH = "b"
 
 
 def instance_mesh(n_instances: int, devices=None) -> Mesh:
@@ -61,6 +71,32 @@ def instance_mesh(n_instances: int, devices=None) -> Mesh:
     while n > 1 and n_instances % n != 0:
         n -= 1
     return Mesh(np.array(devices[:n]), (_AXIS,))
+
+
+def fleet_mesh(n_instances: int, n_batch: int, devices=None) -> Mesh:
+    """2-D ``(batch, instance)`` mesh for the serving-fleet path (DESIGN.md
+    §10): independent scheduling problems — dispatcher slots, scenario
+    replicas — shard along ``"b"`` while each problem's decision rows shard
+    along ``"i"`` as in :func:`instance_mesh`.
+
+    Picks the divisor pair ``(nb | n_batch, ni | n_instances)`` using the
+    most devices; ties prefer instance sharding (it is the axis that cuts
+    the O(I²) price/decision memory). Degenerates to the 1-D instance mesh
+    shape when ``n_batch == 1``.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    n = len(devices)
+    best = (1, 1)
+    for nb in range(1, n + 1):
+        if n_batch % nb != 0:
+            continue
+        ni = n // nb
+        while ni > 1 and n_instances % ni != 0:
+            ni -= 1
+        if nb * ni > best[0] * best[1] or (nb * ni == best[0] * best[1] and ni > best[1]):
+            best = (nb, ni)
+    nb, ni = best
+    return Mesh(np.array(devices[: nb * ni]).reshape(nb, ni), (_BATCH, _AXIS))
 
 
 def _prob_specs(prob: SchedProblem) -> SchedProblem:
@@ -133,6 +169,50 @@ def sharded_schedule(
         mesh=mesh,
         in_specs=(_prob_specs(prob), P(None, None), P(_AXIS), P(_AXIS, None), P(_AXIS, None)),
         out_specs=P(_AXIS, None),
+    )(prob, U, q_in, q_out, must_send)
+
+
+@partial(jax.jit, static_argnames=("mesh", "method"))
+def sharded_schedule_batch(
+    mesh: Mesh,
+    prob: SchedProblem,
+    U: jax.Array,  # (K, K)
+    q_in: jax.Array,  # (B, I)
+    q_out: jax.Array,  # (B, I, C)
+    must_send: jax.Array,  # (B, I, C)
+    V: float,
+    beta: float,
+    method: str = "sort",
+) -> jax.Array:
+    """A batch of independent Algorithm-1 slots on a :func:`fleet_mesh`.
+
+    Returns X (B, I, I), sharded ``("b", "i", None)``. Each batch entry is
+    one scheduling problem (a dispatcher slot, a scenario replica) over the
+    *same* static ``prob``; the per-batch ``all_gather`` of ``q_in`` runs
+    along ``"i"`` only, so batch entries never communicate.
+    """
+    B = q_in.shape[0]
+    nb = mesh.shape[_BATCH]
+    if B % nb != 0:
+        raise ValueError(f"batch {B} not divisible by mesh batch axis {nb}")
+
+    def local(prob, U, q_in, q_out, must_send):
+        q_in_full = jax.lax.all_gather(q_in, _AXIS, axis=1, tiled=True)  # (B_loc, I)
+
+        def one(qi, qo, ms):
+            x, _ = _local_schedule(prob, U, qi, qo, ms, V, beta, method)
+            return x
+
+        return jax.vmap(one)(q_in_full, q_out, must_send)
+
+    return shard_map_compat(
+        local,
+        mesh=mesh,
+        in_specs=(
+            _prob_specs(prob), P(None, None), P(_BATCH, _AXIS),
+            P(_BATCH, _AXIS, None), P(_BATCH, _AXIS, None),
+        ),
+        out_specs=P(_BATCH, _AXIS, None),
     )(prob, U, q_in, q_out, must_send)
 
 

@@ -256,7 +256,7 @@ def run_sweep(
     spec: SweepSpec,
     mu: np.ndarray | None = None,
     engine: str = "jax",  # jax (batched) | cohort-fused (batched responses) | cohort
-    engine_opts: dict | None = None,  # cohort engines: warmup / drain_margin / age_cap
+    engine_opts: dict | None = None,  # cohort engines: warmup/drain_margin/age_cap/service
     events=None,  # dict[str, FleetScenario | EventTrace | None] for spec.events
 ) -> SweepResult:
     """Run every scenario of ``spec`` and return per-scenario results.
@@ -288,6 +288,9 @@ def run_sweep(
             return SweepResult(spec, scenarios, results, n_batches=n_batches)
         from .cohort import run_cohort_sim
 
+        if opts.get("service") is not None:
+            raise ValueError("the service axis is fused-engine only (engine='cohort-fused')")
+        opts.pop("service", None)
         opts.pop("age_cap", None)  # the event loop tracks ages exactly
         results = []
         for scn in scenarios:

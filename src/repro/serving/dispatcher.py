@@ -1,15 +1,30 @@
 """POTUS request dispatcher — the paper's system translated to an LM fleet.
 
-Mapping (DESIGN.md §3): inference requests are *tuples*; model replicas are
+Mapping (DESIGN.md §10): inference requests are *tuples*; model replicas are
 *instances* of one "serve" component; hosts are *containers*; ``U[k,k']`` is
 the inter-host transfer cost; per-replica outstanding work is ``Q_in``; the
 frontends' pending-request buffers are the spout output queues, whose
 lookahead window holds *predicted* future requests (pre-admitted as
 speculative prefill).
 
-Each scheduling slot the dispatcher runs Algorithm 1 (the same
-``core.potus.potus_schedule`` the simulators use) and returns how many
-requests each frontend sends to each replica.
+Each scheduling slot the dispatcher runs Algorithm 1 — the exact
+``core.potus.potus_schedule`` water-fill the simulators use (or a baseline
+from ``core.baselines`` via ``cfg.scheduler``), built **once** at
+construction: the :class:`~repro.core.potus.SchedProblem` and device-resident
+``U`` are reused every slot, so routing costs one jitted call, not a
+retrace + ``make_problem`` rebuild (the ROADMAP's ~14 ms/slot scheduler-cost
+note).
+
+Window/backlog bookkeeping mirrors ``core.cohort_fused._fused_step`` slot
+for slot — observe → schedule → drain (window ascending, then pending) →
+carry unshipped actuals as admission backlog → shift — which is what makes
+the fleet-vs-fused differential test (``tests/test_serving_fleet.py``)
+possible: the dispatcher IS the fused engine's spout, run on the host.
+Disruption traces (``core.events``) enter through ``route(events_row=...)``:
+one ``(mu, gamma, alive)`` slot of an ``EventTrace`` compiled on
+``self.topo`` becomes a :class:`~repro.core.potus.SlotCaps`, so dead
+replicas are priced out and a dead frontend's arrivals are held, exactly as
+in the simulators.
 """
 from __future__ import annotations
 
@@ -19,10 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.network import NetworkCosts
-from repro.core.potus import make_problem, potus_schedule
+from repro.core.potus import caps_for_slot, make_problem
+from repro.core.simulator import _get_scheduler
 from repro.core.topology import Component, build_topology
 
-__all__ = ["DispatcherConfig", "PotusDispatcher"]
+__all__ = ["DispatcherConfig", "PotusDispatcher", "integral_assign"]
 
 
 @dataclasses.dataclass
@@ -31,6 +47,44 @@ class DispatcherConfig:
     beta: float = 1.0
     window: int = 0  # lookahead slots (predictive pre-admission)
     gamma: float = 64.0  # max requests a frontend ships per slot
+    tokens_per_request: float = 1.0  # Q_in normalization: backlog tokens per request
+    scheduler: str = "potus"  # "potus" | "potus-loop" | "shuffle" | "jsq"
+    use_pallas: bool = False
+    method: str = "sort"  # potus greedy: "sort" water-fill | "loop" reference
+
+
+def integral_assign(assign: np.ndarray, rng: np.random.Generator | None = None) -> np.ndarray:
+    """Round a fluid (F, R) assignment to integer request counts.
+
+    Largest-remainder rounding per frontend row: row totals round to the
+    nearest integer, entries keep their floors, and the leftover units go to
+    the largest fractional parts (ties → lowest replica index). Preserves
+    each row's (rounded) total, so no frontend silently gains or loses
+    requests.
+
+    With ``rng``, leftover units are instead *sampled* proportionally to the
+    fractional parts (without replacement). This matters for policies whose
+    fluid split is an exact tie — shuffle's even split has identical
+    fractions on every replica, and deterministic tie-breaking would
+    collapse it onto the lowest-index replicas every slot instead of
+    routing uniformly.
+    """
+    assign = np.asarray(assign, np.float64)
+    out = np.floor(assign).astype(np.int64)
+    for f in range(assign.shape[0]):
+        short = int(np.rint(assign[f].sum())) - int(out[f].sum())
+        if short <= 0:
+            continue
+        frac = assign[f] - out[f]
+        pos = np.nonzero(frac > 1e-12)[0]
+        if rng is not None and len(pos) >= short:
+            picks = rng.choice(pos, size=short, replace=False,
+                               p=frac[pos] / frac[pos].sum())
+            out[f, picks] += 1
+        else:
+            order = np.lexsort((np.arange(len(frac)), -frac))
+            out[f, order[:short]] += 1
+    return out
 
 
 class PotusDispatcher:
@@ -40,7 +94,7 @@ class PotusDispatcher:
         replica_hosts: np.ndarray,  # (R,) host id per replica
         frontend_hosts: np.ndarray,  # (F,) host id per frontend
         host_costs: np.ndarray,  # (n_hosts, n_hosts) per-request transfer cost
-        replica_rates: np.ndarray,  # (R,) requests/slot service capacity
+        replica_rates: np.ndarray,  # (R,) service capacity, in Q_in units/slot
         cfg: DispatcherConfig = DispatcherConfig(),
     ):
         R = len(replica_hosts)
@@ -52,8 +106,10 @@ class PotusDispatcher:
                       proc_capacity=float(np.mean(replica_rates))),
         ]
         self.topo = build_topology([app], gamma=cfg.gamma)
-        self.mu = np.zeros(self.topo.n_instances, np.float32)
-        self.mu[F:] = np.asarray(replica_rates, np.float32)  # per-replica capacity
+        # true heterogeneous capacities, so event scenarios compiled on this
+        # topology (core.events generators scale inst_mu) see the real rates
+        self.topo.inst_mu[F:] = np.asarray(replica_rates, np.float32)
+        self.mu = self.topo.inst_mu
         placement = np.concatenate([frontend_hosts, replica_hosts]).astype(np.int32)
         K = int(host_costs.shape[0])
         self.net = NetworkCosts(
@@ -64,48 +120,83 @@ class PotusDispatcher:
             container_server=np.arange(K, dtype=np.int32),
             U=np.asarray(host_costs, np.float32),
         )
+        # built once; every route() reuses the same problem, device-resident
+        # cost matrix, and jitted schedule fn (no per-slot retrace)
         self.prob = make_problem(self.topo, self.net, placement)
+        self._U = jnp.asarray(self.net.U)
+        self._sched = _get_scheduler(cfg.scheduler, cfg.use_pallas)
+        if cfg.scheduler == "potus" and cfg.method != "sort":
+            self._sched = _get_scheduler("potus-loop", cfg.use_pallas)
         self.F, self.R = F, R
         # lookahead window per frontend: predicted request counts per slot
         self.window = np.zeros((F, cfg.window + 1), np.float32)
+        # admission backlog: actual arrivals not yet shipped (gamma-bound
+        # slots, dead frontends, no-alive-replica slots); never dropped
+        self.pending = np.zeros(F, np.float32)
         self.comm_cost_total = 0.0
+        self.h_last = 0.0  # drift backlog h(t) = sum Q_in + beta * sum Q_out
+        self.h_history: list[float] = []
         self._u_pair = self.net.U[np.ix_(placement, placement)]
 
     def observe_prediction(self, predicted: np.ndarray) -> None:
         """predicted: (F, window+1) request counts for slots t..t+W."""
         self.window = np.asarray(predicted, np.float32).reshape(self.F, -1)
 
-    def route(self, arrivals: np.ndarray, replica_backlogs: np.ndarray) -> np.ndarray:
+    def route(
+        self,
+        arrivals: np.ndarray,
+        replica_backlogs: np.ndarray,
+        events_row: tuple | None = None,
+    ) -> np.ndarray:
         """One slot of Algorithm 1.
 
         arrivals: (F,) new requests at each frontend this slot;
-        replica_backlogs: (R,) outstanding work per replica (tokens/requests).
-        Returns (F, R) integer assignment counts; updates the window state.
+        replica_backlogs: (R,) outstanding work per replica, in
+        ``tokens_per_request`` units (e.g. ``ReplicaFleet.backlog_tokens``);
+        events_row: optional ``(mu, gamma, alive)`` triple of (I,) arrays —
+        one slot of an ``EventTrace`` compiled on ``self.topo``.
+
+        Returns the fluid (F, R) assignment (request counts; see
+        :func:`integral_assign` for integer routing) and updates the window,
+        admission backlog, and h(t) diagnostics. The slot order matches
+        ``core.cohort_fused._fused_step``: observe (window sum as spout
+        Q_out, pending included in the mandatory send), schedule, drain the
+        window in ascending lookahead then the pending backlog, carry
+        unshipped actuals, shift.
         """
         I, C = self.topo.n_instances, self.topo.n_components
         self.window[:, 0] += np.asarray(arrivals, np.float32)
 
         q_in = np.zeros(I, np.float32)
-        q_in[self.F:] = np.asarray(replica_backlogs, np.float32)
+        q_in[self.F:] = np.asarray(replica_backlogs, np.float32) / self.cfg.tokens_per_request
         q_out = np.zeros((I, C), np.float32)
         q_out[: self.F, 1] = self.window.sum(axis=1)
         must = np.zeros((I, C), np.float32)
-        must[: self.F, 1] = self.window[:, 0]
+        must[: self.F, 1] = self.window[:, 0] + self.pending
+
+        caps = None
+        if events_row is not None:
+            mu_row, gamma_row, alive_row = (jnp.asarray(a, jnp.float32) for a in events_row)
+            caps = caps_for_slot(mu_row, gamma_row, alive_row)
 
         X = np.asarray(
-            potus_schedule(
+            self._sched(
                 self.prob,
-                jnp.asarray(self.net.U),
+                self._U,
                 jnp.asarray(q_in),
                 jnp.asarray(q_out),
                 jnp.asarray(must),
                 float(self.cfg.V),
                 float(self.cfg.beta),
+                caps=caps,
             )
         )
+        self.h_last = float(q_in.sum() + self.cfg.beta * q_out.sum())
+        self.h_history.append(self.h_last)
         self.comm_cost_total += float((X * self._u_pair).sum())
-        assign = X[: self.F, self.F:]  # (F, R)
-        # drain the window in ascending lookahead order (eq. 4 semantics)
+        assign = X[: self.F, self.F:]  # (F, R) fluid request counts
+        # drain window ascending, then pending (the fused engine's spout
+        # drain buffer order: lookahead buckets first, admission trailing)
         shipped = assign.sum(axis=1)
         for f in range(self.F):
             rem = shipped[f]
@@ -113,7 +204,10 @@ class PotusDispatcher:
                 take = min(rem, self.window[f, w])
                 self.window[f, w] -= take
                 rem -= take
-        # shift the window: next slot's prediction becomes current
+            take = min(rem, self.pending[f])
+            self.pending[f] -= take
+        # carry unshipped actuals; shift the window (next prediction -> pos 0)
+        self.pending += self.window[:, 0]
         self.window[:, :-1] = self.window[:, 1:]
         self.window[:, -1] = 0.0
-        return np.floor(assign).astype(np.int64)
+        return assign

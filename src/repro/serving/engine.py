@@ -8,11 +8,20 @@ active slot. Finished slots are recycled. Greedy sampling (argmax) keeps the
 engine deterministic for tests.
 
 Queue-depth accounting (``backlog_tokens``) is what the POTUS dispatcher
-consumes as ``Q_in`` (paper eq. 16).
+consumes as ``Q_in`` (paper eq. 16). A fleet of these (or of the
+token-accounting :class:`repro.serving.fleet.SimReplica`) is managed by
+:class:`repro.serving.fleet.ReplicaFleet` (DESIGN.md §10).
+
+Fractional ``service_rate`` credit is accounted exactly with
+:class:`ServiceCredit` (rational arithmetic): ``n`` slots at rate ``r`` grant
+exactly ``floor(n * Fraction(r))`` decode rounds — repeated float addition
+would drift (1000 slots at 0.1 ≠ 100 rounds in f64) and the drift compounds
+over long serving horizons.
 """
 from __future__ import annotations
 
 import dataclasses
+from fractions import Fraction
 from functools import partial
 
 import jax
@@ -21,7 +30,7 @@ import numpy as np
 
 from repro.models import model_zoo
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServiceCredit", "ServingEngine"]
 
 
 @dataclasses.dataclass
@@ -30,8 +39,34 @@ class Request:
     tokens: np.ndarray  # prompt
     max_new: int = 16
     slot: int = -1
-    generated: list = dataclasses.field(default_factory=list)
+    generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+class ServiceCredit:
+    """Exact fractional service-credit accumulator.
+
+    ``add(rate)`` banks one slot of capacity; ``take()`` withdraws whole
+    units (decode rounds) and keeps the exact rational remainder, so the
+    carry never drifts however many slots pass and however the per-slot rate
+    varies (stragglers/throttles hand in a different ``rate`` each slot).
+    """
+
+    def __init__(self) -> None:
+        self._credit = Fraction(0)
+
+    def add(self, rate: float | Fraction) -> None:
+        self._credit += Fraction(rate)
+
+    def take(self) -> int:
+        units = int(self._credit)  # floor for the non-negative credit
+        self._credit -= units
+        return units
+
+    @property
+    def fractional(self) -> Fraction:
+        """The banked sub-unit remainder (exact)."""
+        return self._credit
 
 
 class ServingEngine:
@@ -41,9 +76,11 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # tokens of service capacity per scheduler slot (heterogeneity knob)
+        # decode rounds of service capacity per scheduler slot (heterogeneity
+        # knob); fractional rates carry exactly via ServiceCredit
         self.service_rate = service_rate
-        self._credit = 0.0
+        self._credit = ServiceCredit()
+        self.tokens_served = 0  # generated tokens, all requests (throughput ledger)
 
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), model_zoo.cache_spec(cfg, max_batch, max_len)
@@ -98,18 +135,27 @@ class ServingEngine:
         self.active[slot] = True
         req.slot = slot
         req.generated.append(int(nxt))
+        self.tokens_served += 1
         self._pending_emit.append((req.rid, int(nxt)))
         self.slot_req[slot] = req
         return True
 
-    def step(self) -> list[tuple[int, int]]:
-        """Advance one scheduler slot; returns [(rid, token)] emitted."""
-        self._credit += self.service_rate
+    def step(self, rate: float | None = None) -> list[tuple[int, int]]:
+        """Advance one scheduler slot; returns [(rid, token)] emitted.
+
+        ``rate`` overrides ``service_rate`` for this slot only — the hook an
+        event trace (straggler/throttle ``mu_t`` rows, DESIGN.md §9) drives a
+        model-backed fleet through.
+
+        Whole decode rounds the slot cannot use (queue and slots empty) are
+        forfeited, not banked: an idle replica does not accumulate a service
+        burst. Only the sub-unit fractional remainder carries across slots.
+        """
+        self._credit.add(self.service_rate if rate is None else rate)
         emitted: list[tuple[int, int]] = []
-        while self._credit >= 1.0:
+        for _ in range(self._credit.take()):
             emitted.extend(self._pending_emit)
             self._pending_emit.clear()
-            self._credit -= 1.0
             while self._admit_one():
                 pass
             if not self.active.any():
@@ -124,6 +170,7 @@ class ServingEngine:
                 req = self.slot_req[slot]
                 tok = int(nxt[slot])
                 req.generated.append(tok)
+                self.tokens_served += 1
                 emitted.append((req.rid, tok))
                 if len(req.generated) >= req.max_new or self.pos[slot] >= self.max_len - 1:
                     req.done = True

@@ -58,6 +58,24 @@ def test_engine_matches_forward_greedy(small_model):
     assert r.generated == want
 
 
+def test_engine_fractional_rate_credit(small_model):
+    """service_rate=0.5 decodes on exactly every other slot (exact Fraction
+    carry, no float drift), and the tokens_served ledger counts every token."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=48, service_rate=0.5)
+    rng = np.random.default_rng(2)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 6), max_new=8))
+    emitted_per_slot = [len(eng.step()) for _ in range(20)]
+    # slot 1 banks 0.5+0.5 -> 1 round (prefill emits its token then too);
+    # afterwards exactly every other slot serves one decode round
+    assert sum(emitted_per_slot) == 8
+    assert emitted_per_slot[0] == 0  # 0.5 credit: no round yet
+    nonzero = [t for t, n in enumerate(emitted_per_slot) if n]
+    assert all(b - a == 2 for a, b in zip(nonzero, nonzero[1:]))
+    assert eng.tokens_served == 8
+    assert float(eng._credit.fractional) in (0.0, 0.5)
+
+
 def test_dispatcher_balances_heterogeneous_replicas():
     """POTUS routing keeps slow replicas from accumulating unbounded backlog
     and beats uniform-random routing on total queueing."""

@@ -1,0 +1,336 @@
+"""Serving-fleet bridge: dispatcher × events × fleet-vs-fused parity
+(DESIGN.md §10).
+
+The differential tests run one request trace through two systems that share
+nothing but the scheduler: the host-side ``PotusDispatcher`` driving a
+``ReplicaFleet`` of token-accounting replicas, and the in-graph
+``run_cohort_fused`` oracle with the token-length ``service`` axis. On a
+dyadic configuration (integer arrivals and token rates, ``tokens_per_request``
+a power of two, alive counts in {2, 4} so every mandatory even-split and
+proportional-split ratio is a dyadic rational) both trajectories are exact
+in f32 *and* f64, so the per-slot drift backlog h(t) must match bitwise —
+steady state and through a 2-replica failure.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, run_cohort_fused
+from repro.core.events import FleetEvent, FleetScenario, flash_straggler
+from repro.serving.dispatcher import DispatcherConfig, PotusDispatcher, integral_assign
+from repro.serving.engine import ServiceCredit
+from repro.serving.fleet import FleetRequest, ReplicaFleet, SimReplica
+
+TPR = 4.0  # tokens per request (the service-time axis; power of two)
+RATES_TOK = np.array([8.0, 8.0, 4.0, 4.0], np.float32)  # replica tokens/slot
+T = 48
+
+
+def _make_dispatcher(scheduler="potus", V=0.5, beta=1.0, gamma=64.0, window=0):
+    """F=1 frontend + R=4 heterogeneous replicas on 5 hosts, hop-count U."""
+    R = len(RATES_TOK)
+    hosts = 1 + R
+    host_costs = np.ones((hosts, hosts), np.float32) - np.eye(hosts, dtype=np.float32)
+    return PotusDispatcher(
+        n_frontends=1,
+        replica_hosts=np.arange(1, 1 + R),
+        frontend_hosts=np.array([0]),
+        host_costs=host_costs,
+        replica_rates=RATES_TOK,
+        cfg=DispatcherConfig(V=V, beta=beta, gamma=gamma, window=window,
+                             tokens_per_request=TPR, scheduler=scheduler),
+    )
+
+
+def _run_fleet(disp, arrivals, trace=None, max_batch=1 << 20):
+    """Drive a SimReplica fleet with the dispatcher for T slots; returns the
+    per-slot h(t) the dispatcher observed. Shipped request mass lands as one
+    aggregate FleetRequest per (slot, replica) — mass parity is what the
+    oracle can check; integer routing is `integral_assign`'s job."""
+    F = disp.F
+    fleet = ReplicaFleet([SimReplica(float(r), max_batch=max_batch) for r in RATES_TOK])
+    for t in range(len(arrivals)):
+        ev_row = None
+        mu_row = alive_row = None
+        if trace is not None:
+            ev_row = (trace.mu_t[t], trace.gamma_t[t], trace.alive_t[t])
+            mu_row, alive_row = trace.mu_t[t][F:], trace.alive_t[t][F:]
+        assign = disp.route(arrivals[t], fleet.backlog_tokens, events_row=ev_row)
+        for r in range(len(fleet)):
+            mass = float(assign[:, r].sum())
+            if mass > 0.0:
+                fleet.dispatch(r, FleetRequest(rid=t * 10 + r, tokens=mass * TPR,
+                                               submitted=t))
+        fleet.step(t, mu_row=mu_row, alive_row=alive_row)
+    return np.asarray(disp.h_history, np.float32), fleet
+
+
+def _run_fused(disp, arrivals, trace=None, scheduler="potus"):
+    """The same trace on the in-graph oracle: requests/slot at the spout,
+    token rates + service=TPR at the replicas."""
+    I, C, F = disp.topo.n_instances, disp.topo.n_components, disp.F
+    Tn = len(arrivals)
+    act = np.zeros((Tn, I, C), np.float32)
+    act[:, 0, 1] = arrivals[:, 0]
+    service = np.ones(I, np.float32)
+    service[F:] = TPR
+    res = run_cohort_fused(
+        disp.topo, disp.net, np.asarray(disp.prob.inst_container), act, None, Tn,
+        SimConfig(V=disp.cfg.V, beta=disp.cfg.beta, window=disp.cfg.window,
+                  scheduler=scheduler),
+        warmup=0, age_cap=64, events=trace, service=service,
+    )
+    return np.asarray(res.backlog, np.float32)
+
+
+def _arrivals(seed, T=T):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 8, size=(T, 1)).astype(np.float32)  # < capacity 6 req/slot avg
+
+
+# ---------------------------------------------------------------------------
+# exact credit accounting (serving/engine.py satellite)
+# ---------------------------------------------------------------------------
+
+def test_service_credit_carry_is_exact():
+    """n slots at rate r grant exactly floor(n * Fraction(r)) rounds; float
+    accumulation drifts (0.1 summed 1000 times is 99.999... -> 99 rounds)."""
+    credit = ServiceCredit()
+    drift, taken = 0.0, 0
+    for _ in range(1000):
+        credit.add(0.1)
+        taken += credit.take()
+        drift += 0.1
+    assert taken == 100  # == floor(1000 * Fraction(0.1)); Fraction(0.1) > 1/10
+    assert int(drift) == 99  # the bug the Fraction ledger fixes
+    assert 0 <= float(credit.fractional) < 1.0
+
+
+def test_service_credit_varying_rates():
+    from fractions import Fraction
+
+    credit = ServiceCredit()
+    rates = [0.25, 0.5, 1.75, 0.0, 0.5]
+    total = sum(credit.add(r) or credit.take() for r in rates)
+    assert total == 3  # floor at each take; sum(rates) = 3.0 exactly
+    assert credit.fractional == Fraction(0)
+
+
+def test_sim_replica_fractional_service_and_batching():
+    rep = SimReplica(service_rate=3.0, max_batch=2)
+    for rid in range(3):
+        rep.submit(FleetRequest(rid=rid, tokens=4.0, submitted=0))
+    assert rep.backlog_tokens == 12.0
+    done = rep.step(t=0)  # serves 3 of req0's 4 tokens; req2 waits for a slot
+    assert done == [] and rep.n_free_slots == 0
+    done = rep.step(t=1)  # finishes req0 (1 tok), 2 into req1; req2 admitted
+    assert [r.rid for r in done] == [0]
+    assert rep.backlog_tokens == 12.0 - 6.0
+    for t in range(2, 10):
+        rep.step(t=t)
+    assert rep.backlog_tokens == 0.0 and rep.tokens_served == 12.0
+
+
+# ---------------------------------------------------------------------------
+# dispatcher honors event masks
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_routes_zero_to_dead_replica():
+    disp = _make_dispatcher()
+    dead = 2  # global instance id F + 1 (replica index 1)
+    trace = FleetScenario(
+        (FleetEvent("failure", 8, 20, instances=(dead,)),), name="one-dead"
+    ).compile(disp.topo, T)
+    arrivals = _arrivals(3)
+    h, fleet = _run_fleet(disp, arrivals, trace=trace)
+    # re-run recording per-slot assignments
+    disp2 = _make_dispatcher()
+    fleet2 = ReplicaFleet([SimReplica(float(r), max_batch=1 << 20) for r in RATES_TOK])
+    backlog_dead = []
+    for t in range(T):
+        ev = (trace.mu_t[t], trace.gamma_t[t], trace.alive_t[t])
+        assign = disp2.route(arrivals[t], fleet2.backlog_tokens, events_row=ev)
+        if 8 <= t < 20:
+            assert assign[:, 1].sum() == 0.0, f"slot {t} routed to the dead replica"
+        for r in range(4):
+            mass = float(assign[:, r].sum())
+            if mass > 0:
+                fleet2.dispatch(r, FleetRequest(rid=t, tokens=mass * TPR, submitted=t))
+        fleet2.step(t, mu_row=trace.mu_t[t][1:], alive_row=trace.alive_t[t][1:])
+        backlog_dead.append(fleet2.replicas[1].backlog_tokens)
+    # outage: stranded in-flight work holds in place (never dropped) ...
+    frozen = backlog_dead[9:20]
+    assert frozen[0] > 0.0, "an in-flight dispatch should strand at the replica"
+    assert all(b == frozen[0] for b in frozen), "dead replica backlog must hold"
+    # ... and drains as soon as service resumes (new routing may refill later)
+    assert min(backlog_dead[20:27]) == 0.0, "stranded backlog must drain on recovery"
+
+
+def test_dispatcher_pending_carries_unshipped_arrivals():
+    """gamma-starved slots push actuals into the admission backlog instead of
+    dropping them (the pre-refactor dispatcher lost these in the window
+    shift); the mandatory dispatch then drains pending when capacity returns."""
+    disp = _make_dispatcher(gamma=64.0)
+    trace = FleetScenario(
+        (FleetEvent("failure", 0, 6, instances=(1, 2, 3, 4)),), name="all-dead"
+    ).compile(disp.topo, 12)
+    shipped_total = 0.0
+    arrivals = np.full((12, 1), 3.0, np.float32)
+    for t in range(12):
+        ev = (trace.mu_t[t], trace.gamma_t[t], trace.alive_t[t])
+        assign = disp.route(arrivals[t], np.zeros(4, np.float32), events_row=ev)
+        if t < 6:
+            assert assign.sum() == 0.0  # no alive replica: hold, don't ship
+            assert disp.pending.sum() == 3.0 * (t + 1)
+        shipped_total += float(assign.sum())
+    assert disp.pending.sum() == 0.0  # drained by mandatory dispatch
+    assert shipped_total == 36.0  # every arrival eventually shipped
+
+
+# ---------------------------------------------------------------------------
+# fleet vs fused-oracle differential (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["potus", "shuffle", "jsq"])
+def test_fleet_matches_fused_backlog_steady(scheduler):
+    arrivals = _arrivals(11)
+    disp = _make_dispatcher(scheduler=scheduler)
+    h_fleet, fleet = _run_fleet(disp, arrivals)
+    h_fused = _run_fused(_make_dispatcher(scheduler=scheduler), arrivals,
+                         scheduler=scheduler)
+    np.testing.assert_array_equal(h_fleet, h_fused)
+    assert h_fleet.sum() > 0.0  # the system actually queued work
+
+
+@pytest.mark.slow
+def test_fleet_matches_fused_backlog_under_failure():
+    """2-of-4 replica failure (alive counts stay powers of two, keeping the
+    mandatory even-split dyadic) + a x0.25 straggler after recovery: the
+    host fleet and the in-graph oracle agree bitwise through the outage."""
+    arrivals = _arrivals(12)
+    scn = FleetScenario(
+        (FleetEvent("failure", 10, 22, instances=(1, 3)),
+         FleetEvent("straggler", 26, 34, instances=(2,), factor=0.25)),
+        name="k2+straggler",
+    )
+    disp = _make_dispatcher()
+    trace = scn.compile(disp.topo, T)
+    h_fleet, fleet = _run_fleet(disp, arrivals, trace=trace)
+    h_fused = _run_fused(_make_dispatcher(), arrivals, trace=trace)
+    np.testing.assert_array_equal(h_fleet, h_fused)
+    assert h_fleet[10:22].max() > h_fleet[:10].max()  # the outage actually bit
+
+
+def test_fused_service_axis_identity_and_scaling():
+    """service=1 is bit-transparent; service=s equals mu/s bitwise (dyadic)."""
+    arrivals = _arrivals(5)
+    disp = _make_dispatcher()
+    base = _run_fused(disp, arrivals)  # service=TPR path
+
+    disp2 = _make_dispatcher()
+    I, C = disp2.topo.n_instances, disp2.topo.n_components
+    act = np.zeros((T, I, C), np.float32)
+    act[:, 0, 1] = arrivals[:, 0]
+    disp2.topo.inst_mu[1:] = RATES_TOK / TPR  # pre-scaled rates, no service axis
+    res = run_cohort_fused(
+        disp2.topo, disp2.net, np.asarray(disp2.prob.inst_container), act, None, T,
+        SimConfig(V=0.5, beta=1.0, window=0), warmup=0, age_cap=64,
+    )
+    np.testing.assert_array_equal(base, np.asarray(res.backlog, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# integral routing + fleet mesh
+# ---------------------------------------------------------------------------
+
+def test_integral_assign_preserves_row_totals():
+    rng = np.random.default_rng(0)
+    assign = rng.uniform(0, 3, size=(4, 6))
+    assign[2] = 0.0
+    out = integral_assign(assign)
+    assert out.dtype == np.int64 and (out >= 0).all()
+    np.testing.assert_array_equal(out.sum(axis=1), np.rint(assign.sum(axis=1)))
+    assert (out >= np.floor(assign)).all() and (out <= np.ceil(assign)).all()
+
+
+def test_fleet_mesh_batch_schedule_matches_dense():
+    import jax.numpy as jnp
+
+    from repro.core.potus import potus_schedule
+    from repro.core.sharded import fleet_mesh, sharded_schedule_batch
+
+    disp = _make_dispatcher()
+    mesh = fleet_mesh(disp.topo.n_instances, 4)
+    I, C = disp.topo.n_instances, disp.topo.n_components
+    rng = np.random.default_rng(2)
+    B = 4
+    q_in = jnp.asarray(rng.integers(0, 16, (B, I)).astype(np.float32))
+    q_out = jnp.zeros((B, I, C), jnp.float32).at[:, 0, 1].set(
+        jnp.asarray(rng.integers(0, 8, B).astype(np.float32)))
+    must = q_out * 0.5
+    U = jnp.asarray(disp.net.U)
+    Xb = np.asarray(sharded_schedule_batch(mesh, disp.prob, U, q_in, q_out, must, 0.5, 1.0))
+    for b in range(B):
+        Xd = potus_schedule(disp.prob, U, q_in[b], q_out[b], must[b], 0.5, 1.0)
+        np.testing.assert_array_equal(Xb[b], np.asarray(Xd))
+
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import json, numpy as np, jax, jax.numpy as jnp
+    from repro.core.network import NetworkCosts
+    from repro.core.potus import make_problem, potus_schedule
+    from repro.core.sharded import fleet_mesh, sharded_schedule_batch
+    from repro.core.topology import Component, build_topology
+
+    assert jax.device_count() == 4, jax.device_count()
+    app = [Component("fe", 0, True, parallelism=2, successors=(1,)),
+           Component("serve", 0, False, parallelism=4, proc_capacity=4.0)]
+    topo = build_topology([app], gamma=32.0)
+    K = 4
+    sd = (np.ones((K, K)) - np.eye(K)).astype(np.float32)
+    net = NetworkCosts("t", K, K, sd, np.arange(K, dtype=np.int32), sd)
+    placement = (np.arange(topo.n_instances) % K).astype(np.int32)
+    prob = make_problem(topo, net, placement)
+    mesh = fleet_mesh(topo.n_instances, 2)
+    rng = np.random.default_rng(0)
+    B, I, C = 2, topo.n_instances, topo.n_components
+    q_in = jnp.asarray(rng.integers(0, 16, (B, I)).astype(np.float32))
+    q_out = jnp.zeros((B, I, C), jnp.float32).at[:, :2, 1].set(
+        jnp.asarray(rng.integers(0, 8, (B, 2)).astype(np.float32)))
+    must = q_out * 0.5
+    U = jnp.asarray(net.U)
+    Xb = np.asarray(sharded_schedule_batch(mesh, prob, U, q_in, q_out, must, 0.5, 1.0))
+    ok = all(
+        np.array_equal(Xb[b], np.asarray(
+            potus_schedule(prob, U, q_in[b], q_out[b], must[b], 0.5, 1.0)))
+        for b in range(B)
+    )
+    print(json.dumps({"devices": jax.device_count(),
+                      "mesh": dict(mesh.shape), "ok": bool(ok)}))
+""")
+
+
+@pytest.mark.slow
+def test_fleet_mesh_four_devices_subprocess():
+    """2x2 (batch x instance) mesh on 4 forced host devices: the batched
+    sharded schedule equals the dense one on every batch entry."""
+    env = dict(
+        os.environ,
+        PYTHONPATH="src",
+        JAX_PLATFORMS="cpu",
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    info = json.loads(out.stdout.strip().splitlines()[-1])
+    assert info["devices"] == 4
+    assert info["mesh"] == {"b": 2, "i": 2}
+    assert info["ok"] is True
