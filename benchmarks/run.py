@@ -15,10 +15,11 @@ import time
 
 
 def main() -> None:
-    from . import disruption, paper_figures, serving_fleet, systems_bench
+    from . import disruption, paper_figures, serving_fleet, systems_bench, workload
     from .common import write_bench_json
 
     sections = [
+        ("workload", workload.workload_bench),
         ("fig4", paper_figures.fig4_response_vs_w),
         ("fig5", paper_figures.fig5_backlog_and_cost_vs_v),
         ("fig6ab", paper_figures.fig6ab_predictors),
@@ -51,6 +52,8 @@ def main() -> None:
                      disruption.DISRUPTION_BENCH)
     write_bench_json("BENCH_serving.json", "REPRO_BENCH_SERVING_JSON",
                      serving_fleet.SERVING_BENCH)
+    write_bench_json("BENCH_workload.json", "REPRO_BENCH_WORKLOAD_JSON",
+                     workload.WORKLOAD_BENCH)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,0 +1,128 @@
+"""Workload-engine benchmarks (DESIGN.md §11): generator throughput,
+fixed-memory streaming scans at deep horizons, and the slot-vs-event
+discretization gap.
+
+Three stories:
+
+* ``workload/gen`` — slots/second for every ``ArrivalSpec`` generator on
+  the paper system; the heavy-tailed shapes must stay cheap enough to be
+  the default inputs for Fig. 4/6-style sweeps.
+* ``workload/stream`` — the tentpole claim: ``chunk=`` runs a T=10⁵
+  horizon (paper-scale long-run averages) at the device footprint of one
+  chunk. The row pins wall time plus the bitwise backlog agreement of the
+  chunked run against a monolithic reference at a verifiable T.
+* ``workload/eventgap`` — mean |backlog| gap between the slot engine and
+  the discrete-event oracle (``core.eventsim``, tuple service + landing
+  jitter) per traffic shape: the burstier the input, the larger the gap —
+  quantifying exactly how much the paper's slot abstraction hides.
+
+Rows land in ``BENCH_workload.json`` via the shared schema.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ArrivalSpec,
+    SimConfig,
+    build_topology,
+    container_costs,
+    diamond_app,
+    fat_tree,
+    linear_app,
+    run_event_sim,
+    run_sim,
+    spout_rate_matrix,
+    t_heron_placement,
+)
+from repro.core.workload import GENERATORS
+
+from .common import QUICK, SMOKE, Row, bench_row, paper_system, timer
+
+WORKLOAD_BENCH: list[dict] = []
+
+#: deep-horizon slot count for the streaming row — 10⁵ at full scale
+T_LONG = 2_000 if SMOKE else (20_000 if QUICK else 100_000)
+CHUNK = 512 if SMOKE else 4096
+
+
+def _compact_system():
+    """Small dyadic system whose host-side trace for T=10⁵ stays a few MB —
+    the point of the row is horizon depth, not fleet width."""
+    topo = build_topology(
+        [linear_app(3, parallelism=2, mu=8.0), diamond_app(parallelism=2, mu=8.0)],
+        gamma=64.0,
+    )
+    server_dist, _ = fat_tree(4)
+    net = container_costs("fat-tree", server_dist)
+    rates = spout_rate_matrix(topo, 2.0)
+    placement = t_heron_placement(topo, net, rates, max_per_container=8)
+    return topo, net, placement
+
+
+def workload_bench() -> list[Row]:
+    rows: list[Row] = []
+    sys = paper_system()
+    topo_p = sys.topo
+
+    # --- generator throughput ------------------------------------------------
+    T_gen = 2_000 if SMOKE else 50_000
+    for kind in sorted(GENERATORS):
+        params = {"trace": 2.0 + np.sin(np.linspace(0, 30, 700))} if (
+            kind == "trace-replay") else {}
+        spec = ArrivalSpec(kind=kind, seed=3, utilization=0.7, params=params)
+        spec.generate(topo_p, 64)  # warm any lazy setup out of the timing
+        with timer() as t:
+            arr = spec.generate(topo_p, T_gen)
+        rate = float(arr.mean())
+        rows.append(Row(f"workload/gen/{kind}", t.dt / T_gen * 1e6,
+                        f"T={T_gen};mean_per_cell={rate:.3f}"))
+        WORKLOAD_BENCH.append(bench_row(
+            "workload_gen", "numpy", "-", topo_p.n_instances, T_gen, t.dt,
+            scenario=kind, slots_per_s=round(T_gen / t.dt),
+        ))
+
+    # --- fixed-memory deep-horizon streaming scan ----------------------------
+    topo, net, placement = _compact_system()
+    spec = ArrivalSpec(kind="mmpp", seed=11, rate_per_stream=2.0,
+                       params={"rate_ratio": 6.0})
+    cfg = SimConfig(window=2, scheduler="potus")
+    # bitwise transparency at a cross-checkable horizon first
+    T_ref = min(T_LONG, 2_000)
+    mono = run_sim(topo, net, placement, spec, T_ref, cfg)
+    chk = run_sim(topo, net, placement, spec, T_ref, cfg, chunk=CHUNK)
+    exact = bool(np.array_equal(np.asarray(mono.backlog), np.asarray(chk.backlog)))
+    with timer() as t_long:
+        long = run_sim(topo, net, placement, spec, T_LONG, cfg, chunk=CHUNK)
+    rows.append(Row(
+        f"workload/stream/T{T_LONG}", t_long.dt / T_LONG * 1e6,
+        f"chunk={CHUNK};bitwise_vs_monolithic={exact};"
+        f"avg_backlog={float(np.mean(long.backlog)):.2f}",
+    ))
+    WORKLOAD_BENCH.append(bench_row(
+        "workload_stream", "jax", cfg.scheduler, topo.n_instances, T_LONG,
+        t_long.dt, scenario="mmpp", chunk=CHUNK, bitwise=exact,
+        slots_per_s=round(T_LONG / t_long.dt),
+    ))
+
+    # --- slot-vs-event discretization gap ------------------------------------
+    T_ev = 200 if SMOKE else 1_000
+    cfg_ev = SimConfig(window=2, scheduler="shuffle")
+    for kind, params in (("poisson", {}), ("mmpp", {"rate_ratio": 10.0}),
+                         ("pareto", {"alpha": 1.3})):
+        spec = ArrivalSpec(kind=kind, seed=5, rate_per_stream=2.0, params=params)
+        arr = np.round(spec.generate(topo, T_ev + cfg_ev.window + 1))
+        ref = run_sim(topo, net, placement, arr, T_ev, cfg_ev)
+        with timer() as t_ev:
+            ev = run_event_sim(topo, net, placement, arr, T_ev, cfg_ev,
+                               integral=True, jitter=0.5, seed=7)
+        gap = float(np.abs(np.asarray(ref.backlog, np.float64) - ev.backlog).mean())
+        rows.append(Row(f"workload/eventgap/{kind}", t_ev.dt / T_ev * 1e6,
+                        f"T={T_ev};mean_abs_backlog_gap={gap:.3f};"
+                        f"events={ev.n_events}"))
+        WORKLOAD_BENCH.append(bench_row(
+            "workload_eventgap", "eventsim", cfg_ev.scheduler, topo.n_instances,
+            T_ev, t_ev.dt, scenario=kind, backlog_gap=round(gap, 4),
+            n_events=ev.n_events,
+        ))
+    return rows

@@ -8,7 +8,8 @@ engine).
 from . import prediction
 from .baselines import jsq_schedule, shuffle_schedule
 from .cohort import CohortResult, run_cohort_sim
-from .cohort_fused import run_cohort_fused
+from .cohort_fused import AgeCapSaturationWarning, run_cohort_fused
+from .eventsim import EventSimResult, run_event_sim
 from .events import (
     EventTrace,
     FleetEvent,
@@ -28,7 +29,18 @@ from .sharded import instance_mesh, run_sim_sharded, sharded_schedule
 from .simulator import SimConfig, SimResult, run_sim, sim_step
 from .sweep import Scenario, SweepResult, SweepSpec, run_sweep
 from .topology import Component, Topology, build_topology, diamond_app, linear_app, random_apps
-from .workload import feasible_rates, poisson_arrivals, spout_rate_matrix, trace_synthetic
+from .workload import (
+    ArrivalSpec,
+    diurnal_flash_arrivals,
+    feasible_rates,
+    lognormal_arrivals,
+    mmpp_arrivals,
+    pareto_arrivals,
+    poisson_arrivals,
+    spout_rate_matrix,
+    trace_replay,
+    trace_synthetic,
+)
 
 __all__ = [
     "Component", "Topology", "build_topology", "random_apps", "linear_app", "diamond_app",
@@ -39,9 +51,12 @@ __all__ = [
     "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
     "SimConfig", "SimResult", "run_sim", "sim_step",
     "instance_mesh", "run_sim_sharded", "sharded_schedule",
-    "CohortResult", "run_cohort_sim", "run_cohort_fused",
+    "CohortResult", "run_cohort_sim", "run_cohort_fused", "AgeCapSaturationWarning",
+    "EventSimResult", "run_event_sim",
     "Scenario", "SweepSpec", "SweepResult", "run_sweep",
     "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",
+    "ArrivalSpec", "pareto_arrivals", "lognormal_arrivals", "mmpp_arrivals",
+    "diurnal_flash_arrivals", "trace_replay",
     "FleetEvent", "FleetScenario", "EventTrace", "identity_trace",
     "rolling_restart", "flash_straggler", "k_failures", "diurnal_autoscale", "random_chaos",
 ]

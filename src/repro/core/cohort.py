@@ -116,7 +116,7 @@ def run_cohort_sim(
     topo: Topology,
     net: NetworkCosts,
     inst_container: np.ndarray,
-    actual: np.ndarray,  # (T, I, C) actual arrivals
+    actual,  # (T, I, C) actual arrivals, or ArrivalSpec
     predicted: np.ndarray | None,  # (T, I, C) predicted arrivals (None => perfect)
     T: int,
     cfg: SimConfig,
@@ -127,8 +127,10 @@ def run_cohort_sim(
     import jax.numpy as jnp
 
     from .potus import SlotCaps
+    from .simulator import materialize_arrivals
 
     W = cfg.window
+    actual = materialize_arrivals(actual, topo, T + W + 1)
     if predicted is None:
         predicted = actual
     prob = make_problem(topo, net, inst_container)

@@ -54,6 +54,7 @@ cohort engines).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -66,15 +67,38 @@ from .potus import caps_for_slot, make_problem
 from .simulator import (
     SimConfig,
     _get_scheduler,
-    device_trace,
+    host_trace,
+    materialize_arrivals,
     pad_arrivals,
-    stacked_device_traces,
+    stacked_host_traces,
 )
 from .topology import Topology
 
-__all__ = ["run_cohort_fused", "run_fused_sweep", "drain_ages"]
+__all__ = ["run_cohort_fused", "run_fused_sweep", "drain_ages", "AgeCapSaturationWarning"]
 
 _EPS = 1e-12  # same negligible-mass threshold as the Python engine's FIFOs
+
+#: ``saturated_frac`` above this emits :class:`AgeCapSaturationWarning` —
+#: past ~1% capped completions the response mean is visibly biased low.
+SATURATION_WARN_FRAC = 0.01
+
+
+class AgeCapSaturationWarning(UserWarning):
+    """A cohort-fused run truncated a non-negligible completed-mass fraction
+    at the ``age_cap`` saturation bucket, so reported response times are
+    biased low (DESIGN.md §8). Re-run with the suggested deeper cap."""
+
+
+def _maybe_warn_saturation(saturated_frac: float, age_cap: int) -> None:
+    if saturated_frac > SATURATION_WARN_FRAC:
+        warnings.warn(
+            f"{saturated_frac:.1%} of terminal completions hit the "
+            f"age_cap={age_cap} saturation bucket: response times are "
+            f"silently truncated (biased low). Re-run with a deeper cap, "
+            f"e.g. age_cap={2 * age_cap}.",
+            AgeCapSaturationWarning,
+            stacklevel=3,
+        )
 
 
 def drain_ages(buckets: jax.Array, amount: jax.Array) -> jax.Array:
@@ -187,7 +211,6 @@ def _fused_step(
     I, S, W1 = q_rem.shape
     C = comp_onehot.shape[1]
     Atot = q_in_tag.shape[-1]  # = age_cap + (W1 - 1) + 1
-    S_acc = resp_mass.shape[-1]
     is_spout = prob.is_spout
     spout_f = is_spout.astype(q_rem.dtype)
     bolt_f = 1.0 - spout_f
@@ -264,13 +287,17 @@ def _fused_step(
     served_amt = jnp.minimum(avail.sum(-1), mu) * bolt_f
     served_b = drain_ages(avail, served_amt)
     q_in_tag = (avail - served_b) * bolt_f[:, None]
-    # terminal completions -> response accumulators at absolute source slots
+    # terminal completions -> response accumulators, indexed by *chunk-local*
+    # source slot: ``t`` counts slots within this scan segment, and bucket
+    # ``b`` of slot ``t`` holds source slot ``t0 + t - age_cap + b``, which
+    # is accumulator column ``t + b`` (the accumulator spans the chunk's
+    # global source-slot range [t0 - age_cap, t0 + Tc + W]; the host driver
+    # adds each chunk's slab at offset t0 - age_cap, DESIGN.md §11.2)
     cmass = comp_onehot.T @ (served_b * term_f[:, None])  # (C, Atot)
     resp_per_b = jnp.maximum(
         age_cap - jnp.arange(Atot, dtype=q_rem.dtype), 0.0
     )  # clip(t - s, 0); saturated mass reports age_cap
-    idx = t - age_cap + jnp.arange(Atot)
-    idx = jnp.where(idx < 0, S_acc, idx)  # out-of-range => dropped by scatter
+    idx = t + jnp.arange(Atot)  # always in range: accumulator length Tc + Atot
     resp_mass = resp_mass.at[:, idx].add(cmass, mode="drop")
     resp_time = resp_time.at[:, idx].add(cmass * resp_per_b[None, :], mode="drop")
     # completions reporting the capped response — nonzero means age_cap is
@@ -295,9 +322,11 @@ def _fused_step(
 
 
 @partial(jax.jit, static_argnames=("edges", "scheduler", "use_pallas", "age_cap",
-                                   "n_components", "shared_inputs", "events_shared"))
+                                   "n_components", "shared_inputs", "events_shared"),
+         donate_argnames=("states",))
 def _scan_cohort_fused(
     prob,
+    states,  # 7-tuple state pytree, leading scenario axis (always batched)
     U: jax.Array,  # (K, K)
     mu: jax.Array,  # (I,)
     inv_service: jax.Array,  # (I,)
@@ -306,13 +335,12 @@ def _scan_cohort_fused(
     valid_cmp: jax.Array,  # (I, S)
     succ_map: jax.Array,  # (I, S) int32
     term_f: jax.Array,  # (I,)
-    actual_s: jax.Array,  # (S?, T, I, C) actual arrivals (unbatched if shared)
-    pred_s: jax.Array,  # (S?, T, I, C) predictions for slots 0..T-1
-    nxt_s: jax.Array,  # (S?, T, I, C) predictions entering the window (t+W+1)
-    q_rem0: jax.Array,  # (S?, I, S, W+1) pre-loaded windows, compact
+    actual_s: jax.Array,  # (S?, Tc, I, C) actual arrivals (unbatched if shared)
+    pred_s: jax.Array,  # (S?, Tc, I, C) predictions for the chunk's slots
+    nxt_s: jax.Array,  # (S?, Tc, I, C) predictions entering the window (t+W+1)
     Vs: jax.Array,  # (S,)
     betas: jax.Array,  # (S,)
-    events_s=None,  # (S?, T, I) (mu_t, gamma_t, alive_t) triple, or None
+    events_s=None,  # (S?, Tc, I) (mu_t, gamma_t, alive_t) triple, or None
     edges: tuple = (),
     scheduler: str = "potus",
     use_pallas: bool = False,
@@ -321,25 +349,19 @@ def _scan_cohort_fused(
     shared_inputs: bool = False,
     events_shared: bool = False,
 ):
+    """Scan one chunk of slots for every scenario in the batch.
+
+    The full state (queues + this chunk's response accumulators) is an
+    explicit input/output so a chunked run can thread it through repeated
+    calls at fixed device memory — the input buffers are donated to the next
+    chunk. The monolithic run is the single-chunk case of the same function.
+    """
     sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
     comp_onehot = jax.nn.one_hot(prob.inst_comp, n_components, dtype=mu.dtype)
 
-    def one(actual, pred, nxt, q0, V, beta, ev):
-        T, I, _ = actual.shape
-        S = q0.shape[1]
-        W1 = q0.shape[-1]
-        Atot = age_cap + W1
-        S_acc = T + W1
-        state0 = (
-            q0,
-            jnp.zeros((I, S), mu.dtype),
-            jnp.zeros((I, Atot), mu.dtype),
-            jnp.zeros((I, S, Atot), mu.dtype),
-            jnp.zeros((I, Atot), mu.dtype),
-            jnp.zeros((n_components, S_acc), mu.dtype),
-            jnp.zeros((n_components, S_acc), mu.dtype),
-        )
+    def one(state, actual, pred, nxt, V, beta, ev):
+        T = actual.shape[0]
         step = partial(
             _fused_step, prob, sched, edges, U, u_pair, mu, inv_service, sel_cmp,
             stream_cmp, valid_cmp, succ_map, term_f, comp_onehot, age_cap, use_pallas,
@@ -348,13 +370,13 @@ def _scan_cohort_fused(
         xs = (actual, pred, nxt, jnp.arange(T))
         if ev is not None:
             xs = xs + (ev,)
-        final, (backlog, cost, capped, served) = jax.lax.scan(step, state0, xs)
-        return final[-2], final[-1], backlog, cost, capped.sum(), served.sum()
+        final, (backlog, cost, capped, served) = jax.lax.scan(step, state, xs)
+        return final, (backlog, cost, capped.sum(), served.sum())
 
     ev_ax = None if (events_s is None or events_shared) else 0
-    in_axes = ((None, None, None, None, 0, 0) if shared_inputs else (0, 0, 0, 0, 0, 0))
-    return jax.vmap(one, in_axes=in_axes + (ev_ax,))(
-        actual_s, pred_s, nxt_s, q_rem0, Vs, betas, events_s
+    in_axes = (0,) + ((None, None, None) if shared_inputs else (0, 0, 0)) + (0, 0, ev_ax)
+    return jax.vmap(one, in_axes=in_axes)(
+        states, actual_s, pred_s, nxt_s, Vs, betas, events_s
     )
 
 
@@ -484,11 +506,116 @@ def _device_inputs(topo: Topology, net: NetworkCosts, cpt: _Compact, service=Non
     )
 
 
+def _run_chunked_cohort(
+    prob,
+    dev: dict,
+    cpt: _Compact,
+    scheduler: str,
+    use_pallas: bool,
+    age_cap: int,
+    n_components: int,
+    shared: bool,
+    act: np.ndarray,  # (T, I, C) if shared else (S, T, I, C) — host-resident
+    pred: np.ndarray,
+    nxt: np.ndarray,
+    q0: np.ndarray,  # (I, Sc, W+1) if shared else (S, I, Sc, W+1)
+    Vs: list,
+    betas: list,
+    ev_host,  # numpy (mu_t, gamma_t, alive_t) triple, stacked or shared, or None
+    ev_shared: bool,
+    T: int,
+    W: int,
+    chunk: int | None,
+):
+    """Stream the fused scan ``chunk`` slots at a time (DESIGN.md §11.2).
+
+    Arrival streams and event traces stay host-resident; each call to
+    :func:`_scan_cohort_fused` sees one chunk of slots plus the carried
+    queue state (donated buffers), so device memory is bounded by the chunk
+    size, not T. Per-chunk response-accumulator slabs — indexed by
+    chunk-local source slot — are added into full-horizon host arrays at
+    offset ``t0 - age_cap``; columns before source slot 0 are provably zero
+    (no mass can predate the run) and are sliced off. Per-slot backlog/cost
+    concatenate bitwise across chunk boundaries (the scan body compiles
+    identically for any chunk length); only the response sums re-associate,
+    which is exact on dyadic-arithmetic systems.
+
+    Returns numpy ``(resp_mass, resp_time, backlog, cost, capped, served)``,
+    each with a leading scenario axis; resp_* are (S, C, T + W + 1).
+    """
+    Sn = len(Vs)
+    q0_b = np.broadcast_to(q0, (Sn,) + q0.shape) if shared else q0
+    I, Sc, W1 = q0_b.shape[1:]
+    Atot = age_cap + W1
+    f32 = np.float32
+    carry = (
+        jnp.asarray(q0_b, jnp.float32),
+        jnp.zeros((Sn, I, Sc), jnp.float32),
+        jnp.zeros((Sn, I, Atot), jnp.float32),
+        jnp.zeros((Sn, I, Sc, Atot), jnp.float32),
+        jnp.zeros((Sn, I, Atot), jnp.float32),
+    )
+    resp_mass = np.zeros((Sn, n_components, T + W1), f32)
+    resp_time = np.zeros((Sn, n_components, T + W1), f32)
+    backlogs: list[np.ndarray] = []
+    costs: list[np.ndarray] = []
+    capped_tot = np.zeros(Sn, np.float64)
+    served_tot = np.zeros(Sn, np.float64)
+
+    tc = T if chunk is None else int(chunk)
+    for t0 in range(0, T, tc) or [0]:
+        t1 = min(t0 + tc, T)
+        n = t1 - t0
+        acc = jnp.zeros((Sn, n_components, n + Atot), jnp.float32)
+        states = carry + (acc, jnp.zeros_like(acc))
+        sl = (slice(t0, t1),) if shared else (slice(None), slice(t0, t1))
+        ev_c = None
+        if ev_host is not None:
+            esl = (slice(t0, t1),) if ev_shared else (slice(None), slice(t0, t1))
+            ev_c = tuple(jnp.asarray(e[esl]) for e in ev_host)
+        states, (h, cost, capped, served) = _scan_cohort_fused(
+            prob,
+            states,
+            actual_s=jnp.asarray(act[sl]),
+            pred_s=jnp.asarray(pred[sl]),
+            nxt_s=jnp.asarray(nxt[sl]),
+            Vs=jnp.asarray(Vs, jnp.float32),
+            betas=jnp.asarray(betas, jnp.float32),
+            events_s=ev_c,
+            events_shared=ev_shared,
+            edges=cpt.edges,
+            scheduler=scheduler,
+            use_pallas=use_pallas,
+            age_cap=age_cap,
+            n_components=n_components,
+            shared_inputs=shared,
+            **dev,
+        )
+        carry = states[:5]
+        rm, rt = np.asarray(states[5]), np.asarray(states[6])
+        g0 = t0 - age_cap  # global source slot of the slab's first column
+        lo = max(0, -g0)
+        resp_mass[:, :, g0 + lo : t1 + W1] += rm[:, :, lo:]
+        resp_time[:, :, g0 + lo : t1 + W1] += rt[:, :, lo:]
+        backlogs.append(np.asarray(h))
+        costs.append(np.asarray(cost))
+        capped_tot += np.asarray(capped, np.float64)
+        served_tot += np.asarray(served, np.float64)
+    return (
+        resp_mass,
+        resp_time,
+        np.concatenate(backlogs, axis=1),
+        np.concatenate(costs, axis=1),
+        capped_tot,
+        served_tot,
+    )
+
+
 def run_cohort_fused(
     topo: Topology,
     net: NetworkCosts,
     inst_container: np.ndarray,
-    actual: np.ndarray,  # (T, I, C) actual arrivals
+    actual,  # (T, I, C) actual arrivals, or ArrivalSpec
     predicted: np.ndarray | None,  # (T, I, C) predicted arrivals (None => perfect)
     T: int,
     cfg: SimConfig,
@@ -497,6 +624,7 @@ def run_cohort_fused(
     age_cap: int = 64,
     events=None,  # EventTrace | None — disruption trace (core.events, DESIGN.md §9)
     service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
+    chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
 ) -> CohortResult:
     """Drop-in fused replacement for :func:`repro.core.cohort.run_cohort_sim`.
 
@@ -519,34 +647,26 @@ def run_cohort_fused(
     """
     if age_cap < 2:
         raise ValueError(f"age_cap must be >= 2, got {age_cap}")
+    if chunk is not None and chunk <= 0:
+        raise ValueError(f"chunk must be a positive slot count, got {chunk}")
     W = cfg.window
+    actual = materialize_arrivals(actual, topo, T + W + 1)
     prob = make_problem(topo, net, inst_container)
     cpt = _compact(topo)
     mask = _stream_mask(topo)
     act, pred, nxt, q_rem0 = _prep_streams(actual, predicted, T, W, cpt, mask)
-    resp_mass, resp_time, backlog, cost, capped, served = _scan_cohort_fused(
-        prob,
-        actual_s=jnp.asarray(act),
-        pred_s=jnp.asarray(pred),
-        nxt_s=jnp.asarray(nxt),
-        q_rem0=jnp.asarray(q_rem0),
-        Vs=jnp.asarray([cfg.V], jnp.float32),
-        betas=jnp.asarray([cfg.beta], jnp.float32),
-        events_s=device_trace(events, T),
-        events_shared=True,
-        edges=cpt.edges,
-        scheduler=cfg.scheduler,
-        use_pallas=cfg.use_pallas,
-        age_cap=age_cap,
-        n_components=topo.n_components,
-        shared_inputs=True,
-        **_device_inputs(topo, net, cpt, service),
+    resp_mass, resp_time, backlog, cost, capped, served = _run_chunked_cohort(
+        prob, _device_inputs(topo, net, cpt, service), cpt,
+        cfg.scheduler, cfg.use_pallas, age_cap, topo.n_components,
+        True, act, pred, nxt, q_rem0, [cfg.V], [cfg.beta],
+        host_trace(events, T), True, T, W, chunk,
     )
     weights = np.einsum("sic,ic->cs", act, mask)
     sat = float(capped[0]) / max(float(served[0]), 1e-9)
+    _maybe_warn_saturation(sat, age_cap)
     return _aggregate(
-        np.asarray(resp_mass[0]), np.asarray(resp_time[0]), weights, _reachability(topo),
-        np.asarray(backlog[0]), np.asarray(cost[0]), sat, float(served[0]),
+        resp_mass[0], resp_time[0], weights, _reachability(topo),
+        backlog[0], cost[0], sat, float(served[0]),
         T, W, warmup, drain_margin,
     )
 
@@ -563,6 +683,7 @@ def run_fused_sweep(
     age_cap: int = 64,
     events_map: dict | None = None,  # name -> EventTrace|None, from sweep normalization
     service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
+    chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
 ) -> tuple[list[CohortResult], int]:
     """Run a whole :class:`repro.core.sweep.SweepSpec` grid on the fused
     engine: scenarios partition by (scheduler, window, use_pallas, and
@@ -598,35 +719,29 @@ def run_fused_sweep(
         shared = len({scn.arrival for scn in group}) == 1
         if shared:  # one prep + one weights matrix for the whole partition
             prepped = [_prep_streams(*arr_map[group[0].arrival], T, W, cpt, mask)]
-            act_s, pred_s, nxt_s, q0_s = (jnp.asarray(x) for x in prepped[0])
+            act_s, pred_s, nxt_s, q0_s = prepped[0]
         else:
             prepped = [_prep_streams(*arr_map[scn.arrival], T, W, cpt, mask)
                        for scn in group]
             act_s, pred_s, nxt_s, q0_s = (
-                jnp.asarray(np.stack([p[k] for p in prepped])) for k in range(4)
+                np.stack([p[k] for p in prepped]) for k in range(4)
             )
         weights_s = [np.einsum("sic,ic->cs", p[0], mask) for p in prepped]
-        events_s, ev_shared = None, True
+        ev_host, ev_shared = None, True
         if has_events:
-            events_s, ev_shared = stacked_device_traces(
+            ev_host, ev_shared = stacked_host_traces(
                 [getattr(scn, "events", "none") for scn in group],
                 [trace_of(scn) for scn in group], T,
             )
-        resp_mass, resp_time, backlog, cost, capped, served = _scan_cohort_fused(
-            prob,
-            actual_s=act_s, pred_s=pred_s, nxt_s=nxt_s, q_rem0=q0_s,
-            Vs=jnp.asarray([scn.V for scn in group], jnp.float32),
-            betas=jnp.asarray([scn.beta for scn in group], jnp.float32),
-            events_s=events_s, events_shared=ev_shared,
-            edges=cpt.edges, scheduler=scheduler, use_pallas=use_pallas,
-            age_cap=age_cap, n_components=topo.n_components, shared_inputs=shared,
-            **dev,
-        )
-        resp_mass, resp_time, backlog, cost, capped, served = (
-            np.asarray(x) for x in (resp_mass, resp_time, backlog, cost, capped, served)
+        resp_mass, resp_time, backlog, cost, capped, served = _run_chunked_cohort(
+            prob, dev, cpt, scheduler, use_pallas, age_cap, topo.n_components,
+            shared, act_s, pred_s, nxt_s, q0_s,
+            [scn.V for scn in group], [scn.beta for scn in group],
+            ev_host, ev_shared, T, W, chunk,
         )
         for s, scn in enumerate(group):
             sat = float(capped[s]) / max(float(served[s]), 1e-9)
+            _maybe_warn_saturation(sat, age_cap)
             results[scn.index] = _aggregate(
                 resp_mass[s], resp_time[s], weights_s[0 if shared else s], reach,
                 backlog[s], cost[s], sat, float(served[s]), T, W, warmup, drain_margin,

@@ -31,28 +31,47 @@ from .topology import Topology
 __all__ = ["SimResult", "run_sim", "SimConfig", "sim_step", "pad_arrivals", "device_trace"]
 
 
-def device_trace(events: EventTrace | None, T: int):
-    """Events as scan inputs: a (mu_t, gamma_t, alive_t) triple of (T, I)
-    device arrays sized to ``T``, or None for the undisturbed fast path."""
+def host_trace(events: EventTrace | None, T: int):
+    """Events as host arrays: a (mu_t, gamma_t, alive_t) triple of (T, I)
+    float32 numpy arrays sized to ``T``, or None. The chunked drivers slice
+    these per chunk before transfer, so a T=10⁵ disruption trace never lives
+    on the device whole (DESIGN.md §11.2)."""
     if events is None:
         return None
     ev = events.prepared(T)
     return (
-        jnp.asarray(ev.mu_t, jnp.float32),
-        jnp.asarray(ev.gamma_t, jnp.float32),
-        jnp.asarray(ev.alive_t, jnp.float32),
+        np.asarray(ev.mu_t, np.float32),
+        np.asarray(ev.gamma_t, np.float32),
+        np.asarray(ev.alive_t, np.float32),
     )
 
 
-def stacked_device_traces(names, traces, T: int):
-    """(events_s, events_shared) for one scenario batch: a single device
-    trace when every scenario names the same trace, else the three tensors
-    stacked to (S, T, I) for the vmap axis. Shared by the JAX-engine and
-    cohort-fused sweep partitions so they batch events identically."""
+def device_trace(events: EventTrace | None, T: int):
+    """Events as scan inputs: a (mu_t, gamma_t, alive_t) triple of (T, I)
+    device arrays sized to ``T``, or None for the undisturbed fast path."""
+    host = host_trace(events, T)
+    if host is None:
+        return None
+    return tuple(jnp.asarray(h) for h in host)
+
+
+def stacked_host_traces(names, traces, T: int):
+    """(events_s, events_shared) as host arrays: a single (T, I) triple when
+    every scenario names the same trace, else the three tensors stacked to
+    (S, T, I) for the vmap axis. Shared by the JAX-engine and cohort-fused
+    sweep partitions so they batch events identically."""
     if len(set(names)) == 1:
-        return device_trace(traces[0], T), True
-    dev = [device_trace(tr, T) for tr in traces]
-    return tuple(jnp.stack([d[k] for d in dev]) for k in range(3)), False
+        return host_trace(traces[0], T), True
+    host = [host_trace(tr, T) for tr in traces]
+    return tuple(np.stack([h[k] for h in host]) for k in range(3)), False
+
+
+def stacked_device_traces(names, traces, T: int):
+    """Device-array version of :func:`stacked_host_traces`."""
+    ev, shared = stacked_host_traces(names, traces, T)
+    if ev is not None:
+        ev = tuple(jnp.asarray(e) for e in ev)
+    return ev, shared
 
 
 def _check_mu_override(mu, events) -> None:
@@ -158,7 +177,7 @@ def sim_step(
     return new_state, metrics
 
 
-@partial(jax.jit, static_argnames=("scheduler", "use_pallas"))
+@partial(jax.jit, static_argnames=("scheduler", "use_pallas"), donate_argnames=("state0",))
 def _scan_sim(
     prob: SchedProblem,
     state0: SimState,
@@ -189,48 +208,77 @@ def _scan_sim(
     return final, h, cost, qi, qo, served
 
 
+def materialize_arrivals(arrivals, topo: Topology, n_slots: int) -> np.ndarray:
+    """Resolve an ``ArrivalSpec`` into a concrete ``(n_slots, I, C)`` tensor;
+    arrays pass through unchanged (DESIGN.md §11.1)."""
+    from .workload import ArrivalSpec  # local import: workload has no sim deps
+
+    if isinstance(arrivals, ArrivalSpec):
+        return arrivals.generate(topo, n_slots)
+    return np.asarray(arrivals)
+
+
 def run_sim(
     topo: Topology,
     net: NetworkCosts,
     inst_container: np.ndarray,
-    arrivals: np.ndarray,  # (T + window + 1, I, C) actual+predicted arrivals
+    arrivals,  # (T + window + 1, I, C) actual+predicted arrivals, or ArrivalSpec
     T: int,
     cfg: SimConfig,
     mu: np.ndarray | None = None,
     events: EventTrace | None = None,  # disruption trace (core.events, DESIGN.md §9)
+    chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
 ) -> SimResult:
     _check_mu_override(mu, events)
+    arrivals = materialize_arrivals(arrivals, topo, T + cfg.window + 1)
     if cfg.sharded:
         if cfg.use_pallas:
             raise ValueError("sharded engine has no Pallas path yet (use one or the other)")
+        if chunk is not None:
+            raise ValueError("chunked scan is not supported on the sharded engine yet")
         return run_sim_sharded(topo, net, inst_container, arrivals, T, cfg, mu=mu,
                                events=events)
+    if chunk is not None and chunk <= 0:
+        raise ValueError(f"chunk must be a positive slot count, got {chunk}")
     W = cfg.window
     arrivals = pad_arrivals(arrivals, T + W + 1)
     prob = make_problem(topo, net, inst_container)
-    state0 = init_state(topo, W, arrivals[: W + 1])
-    window_stream = jnp.asarray(arrivals[W + 1 : T + W + 1], jnp.float32)
+    state = init_state(topo, W, arrivals[: W + 1])
+    # Keep the full-horizon streams on the host; only one chunk of slots is
+    # ever resident on the device (the monolithic path is the single-chunk
+    # special case of the same loop, so both are the same compiled scan).
+    window_stream = np.asarray(arrivals[W + 1 : T + W + 1], np.float32)
+    ev_host = host_trace(events, T)
     mu_arr = jnp.asarray(mu if mu is not None else topo.inst_mu, jnp.float32)
     sel_rows = jnp.asarray(topo.selectivity[topo.inst_comp], jnp.float32)
+    U = jnp.asarray(net.U)
 
-    final, h, cost, qi, qo, served = _scan_sim(
-        prob,
-        state0,
-        window_stream,
-        jnp.asarray(net.U),
-        mu_arr,
-        sel_rows,
-        float(cfg.V),
-        float(cfg.beta),
-        events=device_trace(events, T),
-        scheduler=cfg.scheduler,
-        use_pallas=cfg.use_pallas,
-    )
+    tc = T if chunk is None else int(chunk)
+    outs: list[list[np.ndarray]] = [[], [], [], [], []]
+    for t0 in range(0, T, tc) or [0]:
+        t1 = min(t0 + tc, T)
+        ev_c = None if ev_host is None else tuple(jnp.asarray(e[t0:t1]) for e in ev_host)
+        state, *per_slot = _scan_sim(
+            prob,
+            state,
+            jnp.asarray(window_stream[t0:t1]),
+            U,
+            mu_arr,
+            sel_rows,
+            float(cfg.V),
+            float(cfg.beta),
+            events=ev_c,
+            scheduler=cfg.scheduler,
+            use_pallas=cfg.use_pallas,
+        )
+        for acc, piece in zip(outs, per_slot):
+            acc.append(np.asarray(piece))
+    h, cost, qi, qo, served = (np.concatenate(a) for a in outs)
     return SimResult(
-        backlog=np.asarray(h),
-        comm_cost=np.asarray(cost),
-        q_in_total=np.asarray(qi),
-        q_out_total=np.asarray(qo),
-        served_total=np.asarray(served),
-        final_state=jax.device_get(final),
+        backlog=h,
+        comm_cost=cost,
+        q_in_total=qi,
+        q_out_total=qo,
+        served_total=served,
+        final_state=jax.device_get(state),
     )

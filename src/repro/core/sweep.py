@@ -39,16 +39,17 @@ import numpy as np
 from .events import EventTrace, FleetScenario
 from .network import NetworkCosts
 from .potus import caps_for_slot, make_problem
-from .queues import init_state, init_state_batch
+from .queues import init_state_batch
 from .simulator import (
     SimConfig,
     SimResult,
     _check_mu_override,
     _get_scheduler,
+    materialize_arrivals,
     pad_arrivals,
     run_sim,
     sim_step,
-    stacked_device_traces,
+    stacked_host_traces,
 )
 from .topology import Topology
 
@@ -168,10 +169,10 @@ class SweepResult:
 
 
 @partial(jax.jit, static_argnames=("scheduler", "use_pallas", "shared_inputs",
-                                   "events_shared"))
+                                   "events_shared"), donate_argnames=("states0",))
 def _scan_sweep(
     prob,
-    states0,  # SimState pytree, leading scenario axis S (unbatched if shared)
+    states0,  # SimState pytree, leading scenario axis S (always batched)
     streams: jax.Array,  # (S, T, I, C) window-entry streams ((T, I, C) if shared)
     U: jax.Array,  # (K, K)
     mu: jax.Array,  # (I,)
@@ -201,16 +202,23 @@ def _scan_sweep(
         return jax.lax.scan(step, state0, xs)
 
     # when every scenario in the batch shares one arrival tensor (a pure
-    # V/beta sweep), scan a single stream instead of S stacked copies
+    # V/beta sweep), scan a single stream instead of S stacked copies; the
+    # state is always batched so a chunked run can feed each chunk's final
+    # states straight back in as the next chunk's initial states
     ev_ax = None if (events_s is None or events_shared) else 0
-    in_axes = ((None, None, 0, 0) if shared_inputs else (0, 0, 0, 0)) + (ev_ax,)
+    in_axes = (0,) + ((None, 0, 0) if shared_inputs else (0, 0, 0)) + (ev_ax,)
     return jax.vmap(one, in_axes=in_axes)(states0, streams, Vs, betas, events_s)
 
 
-def _normalize_arrivals(arrivals, spec: SweepSpec) -> dict[str, tuple[np.ndarray, np.ndarray | None]]:
-    """name -> (actual, predicted|None). A bare array is the scenario
-    ``"default"`` with perfect prediction."""
-    if isinstance(arrivals, np.ndarray):
+def _normalize_arrivals(
+    arrivals, spec: SweepSpec, topo: Topology, n_slots: int
+) -> dict[str, tuple[np.ndarray, np.ndarray | None]]:
+    """name -> (actual, predicted|None). A bare array (or ``ArrivalSpec``) is
+    the scenario ``"default"`` with perfect prediction; ``ArrivalSpec``
+    values are materialized here against the sweep's topology and horizon."""
+    from .workload import ArrivalSpec
+
+    if isinstance(arrivals, (np.ndarray, ArrivalSpec)):
         arrivals = {"default": arrivals}
     out: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
     for name, val in arrivals.items():
@@ -218,7 +226,10 @@ def _normalize_arrivals(arrivals, spec: SweepSpec) -> dict[str, tuple[np.ndarray
             actual, predicted = val
         else:
             actual, predicted = val, None
-        out[name] = (np.asarray(actual), None if predicted is None else np.asarray(predicted))
+        actual = materialize_arrivals(actual, topo, n_slots)
+        if predicted is not None:
+            predicted = materialize_arrivals(predicted, topo, n_slots)
+        out[name] = (actual, predicted)
     missing = [a for a in spec.arrival if a not in out]
     if missing:
         raise KeyError(f"spec names arrival scenarios {missing} not present in arrivals")
@@ -256,7 +267,8 @@ def run_sweep(
     spec: SweepSpec,
     mu: np.ndarray | None = None,
     engine: str = "jax",  # jax (batched) | cohort-fused (batched responses) | cohort
-    engine_opts: dict | None = None,  # cohort engines: warmup/drain_margin/age_cap/service
+    engine_opts: dict | None = None,  # warmup/drain_margin/age_cap/service (cohort
+    #   engines) and "chunk" (streaming scan, jax + cohort-fused; DESIGN.md §11.2)
     events=None,  # dict[str, FleetScenario | EventTrace | None] for spec.events
 ) -> SweepResult:
     """Run every scenario of ``spec`` and return per-scenario results.
@@ -268,10 +280,17 @@ def run_sweep(
     or the sequential Python event loop ``engine="cohort"`` (the semantic
     oracle). Named disruption traces (``spec.events`` / the ``events`` map,
     core.events) form one more scenario axis on every engine.
+
+    ``engine_opts={"chunk": n}`` streams each scan ``n`` slots at a time
+    (carry checkpointing, host-resident streams) on the ``jax`` and
+    ``cohort-fused`` engines, so deep horizons run at fixed device memory.
     """
     scenarios = spec.scenarios()
-    arr_map = _normalize_arrivals(arrivals, spec)
+    arr_map = _normalize_arrivals(arrivals, spec, topo, T + max(spec.window) + 1)
     ev_map = _normalize_events(events, spec, topo, T, inst_container)
+    chunk = (engine_opts or {}).get("chunk")
+    if chunk is not None and (not isinstance(chunk, (int, np.integer)) or chunk <= 0):
+        raise ValueError(f"engine_opts['chunk'] must be a positive slot count, got {chunk!r}")
 
     if engine in ("cohort", "cohort-fused"):
         if mu is not None:
@@ -290,7 +309,11 @@ def run_sweep(
 
         if opts.get("service") is not None:
             raise ValueError("the service axis is fused-engine only (engine='cohort-fused')")
+        if opts.get("chunk") is not None:
+            raise ValueError("engine_opts['chunk'] applies to the scan engines "
+                             "(jax / cohort-fused); the cohort event loop already streams")
         opts.pop("service", None)
+        opts.pop("chunk", None)
         opts.pop("age_cap", None)  # the event loop tracks ages exactly
         results = []
         for scn in scenarios:
@@ -302,8 +325,9 @@ def run_sweep(
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
     if engine != "jax":
         raise ValueError(f"unknown engine {engine!r}")
-    if engine_opts:
-        raise ValueError("engine_opts applies to the cohort engines only")
+    extra = set(engine_opts or {}) - {"chunk"}
+    if extra:
+        raise ValueError(f"engine_opts {sorted(extra)} apply to the cohort engines only")
     active_traces = [t for t in (ev_map[scn.events] for scn in scenarios) if t is not None]
     if active_traces:
         _check_mu_override(mu, active_traces[0])
@@ -315,6 +339,8 @@ def run_sweep(
             "treats its single stream as the predicted/actual arrivals combined)"
         )
     if spec.sharded:
+        if chunk is not None:
+            raise ValueError("chunked scan is not supported on the sharded engine yet")
         # shard_map partitions the instance axis across devices; scenarios are
         # not additionally vmapped (the sharded path targets single big-I
         # scenarios, not wide grids) — run the grid sequentially (DESIGN.md §7)
@@ -340,11 +366,14 @@ def run_sweep(
 
     results: list[SimResult | None] = [None] * len(scenarios)
     for (scheduler, W, use_pallas, has_events), group in groups.items():
+        S = len(group)
         shared = len({scn.arrival for scn in group}) == 1
+        # streams stay host-resident; the chunk loop below transfers one
+        # slice at a time (the monolithic run is the single-chunk case)
         if shared:
             p = pad_arrivals(arr_map[group[0].arrival][0].astype(np.float32, copy=False), T + W + 1)
-            streams = jnp.asarray(p[W + 1 : T + W + 1], jnp.float32)
-            states0 = init_state(topo, W, p[: W + 1])
+            streams = p[W + 1 : T + W + 1]
+            prefixes = np.broadcast_to(p[: W + 1], (S,) + p[: W + 1].shape)
         else:
             # one stacked stream per scenario, even when some scenarios share
             # an arrival tensor — duplicates cost memory, never correctness;
@@ -354,23 +383,35 @@ def run_sweep(
                 for scn in group
             ]
             prefixes = np.stack([p[: W + 1] for p in padded])  # (S, W+1, I, C)
-            streams = jnp.asarray(np.stack([p[W + 1 : T + W + 1] for p in padded]), jnp.float32)
-            states0 = init_state_batch(topo, W, prefixes)
+            streams = np.stack([p[W + 1 : T + W + 1] for p in padded])
+        states = init_state_batch(topo, W, prefixes)
         Vs = jnp.asarray([scn.V for scn in group], jnp.float32)
         betas = jnp.asarray([scn.beta for scn in group], jnp.float32)
-        events_s, ev_shared = None, True
+        ev_host, ev_shared = None, True
         if has_events:
-            events_s, ev_shared = stacked_device_traces(
+            ev_host, ev_shared = stacked_host_traces(
                 [scn.events for scn in group], [ev_map[scn.events] for scn in group], T
             )
 
-        final, (h, cost, qi, qo, served) = _scan_sweep(
-            prob, states0, streams, U, mu_arr, sel_rows, Vs, betas,
-            events_s=events_s, events_shared=ev_shared,
-            scheduler=scheduler, use_pallas=use_pallas, shared_inputs=shared,
-        )
-        h, cost, qi, qo, served = (np.asarray(x) for x in (h, cost, qi, qo, served))
-        final = jax.device_get(final)
+        tc = T if chunk is None else int(chunk)
+        outs: list[list[np.ndarray]] = [[], [], [], [], []]
+        for t0 in range(0, T, tc) or [0]:
+            t1 = min(t0 + tc, T)
+            stream_c = jnp.asarray(streams[t0:t1] if shared else streams[:, t0:t1])
+            ev_c = None
+            if ev_host is not None:
+                ev_c = tuple(
+                    jnp.asarray(e[t0:t1] if ev_shared else e[:, t0:t1]) for e in ev_host
+                )
+            states, (h, cost, qi, qo, served) = _scan_sweep(
+                prob, states, stream_c, U, mu_arr, sel_rows, Vs, betas,
+                events_s=ev_c, events_shared=ev_shared,
+                scheduler=scheduler, use_pallas=use_pallas, shared_inputs=shared,
+            )
+            for acc, piece in zip(outs, (h, cost, qi, qo, served)):
+                acc.append(np.asarray(piece))
+        h, cost, qi, qo, served = (np.concatenate(a, axis=1) for a in outs)
+        final = jax.device_get(states)
         for s, scn in enumerate(group):
             results[scn.index] = SimResult(
                 backlog=h[s],

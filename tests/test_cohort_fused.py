@@ -258,6 +258,22 @@ class TestPotusPaperSystem:
         assert shallow.saturated_frac > 0.05
         assert deep.saturated_frac < 0.01
 
+    def test_saturation_emits_warning_with_suggested_cap(self, small_system, arrivals):
+        """A saturated run warns loudly (DESIGN.md §11): the warning names
+        the offending age_cap and suggests a doubled one; a clean run stays
+        silent."""
+        import warnings
+
+        from repro.core import AgeCapSaturationWarning
+
+        topo, net, rates, placement = small_system
+        cfg = SimConfig(V=10.0, window=1)
+        with pytest.warns(AgeCapSaturationWarning, match="age_cap=16.*age_cap=32"):
+            run_cohort_fused(topo, net, placement, arrivals, None, T, cfg, age_cap=16)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", AgeCapSaturationWarning)
+            run_cohort_fused(topo, net, placement, arrivals, None, T, cfg, age_cap=256)
+
 
 # ---------------------------------------------------------------------------
 # sweep integration: vmapped grid == per-scenario fused calls

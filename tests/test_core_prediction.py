@@ -82,3 +82,54 @@ def test_false_positive_hurts_at_large_x(small_system):
         SimConfig(V=1.0, window=W),
     )
     assert heavy.avg_response > perfect.avg_response
+
+
+# ---------------------------------------------------------------------------
+# heavy-tailed / bursty input (DESIGN.md §11.1): the paper's Fig. 6
+# predictors must stay numerically sane far outside Poisson conditions
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bursty_tensors():
+    from repro.core import build_topology, linear_app, mmpp_arrivals, pareto_arrivals
+    from repro.core.workload import spout_rate_matrix
+
+    topo = build_topology([linear_app(3, parallelism=2, mu=8.0)], gamma=64.0)
+    rates = spout_rate_matrix(topo, 3.0)
+    return {
+        "pareto": pareto_arrivals(np.random.default_rng(5), rates, 400, alpha=1.3),
+        "mmpp": mmpp_arrivals(np.random.default_rng(5), rates, 400, rate_ratio=12.0),
+    }
+
+
+@pytest.mark.parametrize("kind", ["pareto", "mmpp"])
+@pytest.mark.parametrize("name", sorted(PREDICTORS))
+def test_predictors_finite_on_heavy_tailed_streams(name, kind, bursty_tensors):
+    """A single 100x Pareto burst must not blow any predictor up: outputs
+    stay finite, integer, nonnegative, and silent streams stay silent."""
+    arr = bursty_tensors[kind]
+    pred = predict_series(name, arr, np.random.default_rng(0))
+    assert pred.shape == arr.shape
+    assert np.isfinite(pred).all()
+    assert (pred >= 0).all() and (pred == np.rint(pred)).all()
+    silent = arr.sum(axis=0) == 0
+    assert (pred[:, silent] == 0).all()
+
+
+@pytest.mark.parametrize("kind", ["pareto", "mmpp"])
+def test_misprediction_scenarios_preserve_actual_mass_on_bursts(kind, bursty_tensors):
+    """The Fig. 6c extremes perturb the *predicted* stream only: under
+    heavy-tailed actuals, false-positive never deletes real tuples (its
+    phantom overlay is additive) and its phantom mass matches the
+    requested rate; all-true-negative is exactly zero."""
+    from repro.core.prediction import misprediction_scenarios
+
+    arr = bursty_tensors[kind]
+    scns = misprediction_scenarios(arr, fp_levels=(10.0,))
+    assert scns["perfect"] is None
+    assert (scns["all-true-negative"] == 0).all()
+    fp = scns["false-positive-10"]
+    assert np.isfinite(fp).all()
+    assert (fp >= arr).all()  # every actual tuple survives in the prediction
+    phantom_rate = float((fp - arr).sum(axis=(1, 2)).mean())
+    assert 7.0 < phantom_rate < 13.0  # burstiness must not skew the overlay

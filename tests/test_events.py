@@ -475,8 +475,35 @@ class TestConservation:
 
 
 # ---------------------------------------------------------------------------
-# seeded random-chaos conservation (hypothesis; nightly -m slow)
+# seeded random-chaos conservation — a fast deterministic grid runs in
+# tier 1; hypothesis widens the same property nightly under -m slow
 # ---------------------------------------------------------------------------
+
+class TestChaosConservationSeeded:
+    @pytest.mark.parametrize("seed,n_events,window",
+                             [(0, 3, 0), (7, 6, 2), (23, 10, 0)])
+    def test_random_chaos_conserves_mass_in_both_engines(
+            self, chain_system, seed, n_events, window):
+        """The tier-1 cut of the nightly chaos property: a few pinned
+        (seed, event-count, window) points through the same strict
+        conservation check, fast enough for every CI run."""
+        topo, net, rates, placement = chain_system
+        Tc = 140
+        arr = _burst_arrivals(topo, Tc + window + 1, active_until=30,
+                              seed=seed % 17)
+        scen = random_chaos(topo, 90, np.random.default_rng(seed),
+                            n_events=n_events, max_duration=25,
+                            placement=placement)
+        trace = scen.compile(topo, Tc, placement=placement)
+        injected = _total_injected(topo, arr, Tc)
+        cfg = SimConfig(V=1.0, window=window, scheduler="shuffle")
+        py = run_cohort_sim(topo, net, placement, arr, None, Tc, cfg,
+                            warmup=0, events=trace)
+        fu = run_cohort_fused(topo, net, placement, arr, None, Tc, cfg,
+                              warmup=0, events=trace, age_cap=160)
+        assert py.completed_mass == pytest.approx(injected, rel=1e-5)
+        assert fu.completed_mass == pytest.approx(injected, rel=1e-4)
+
 
 @pytest.mark.slow
 class TestChaosConservation:

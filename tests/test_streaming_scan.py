@@ -1,0 +1,184 @@
+"""Chunked streaming scans are bit-transparent (DESIGN.md §11.2).
+
+``chunk=`` splits a T-slot ``lax.scan`` into ceil(T/chunk) scans whose
+carries chain on device while per-slot outputs stream to the host — fixed
+device memory in T. XLA compiles the *step* function, not the horizon, so
+a chunked run must reproduce the monolithic run **bitwise**: same carries,
+same per-slot series, same response histograms. These tests pin that
+contract on the dyadic system for every engine that accepts ``chunk``
+(run_sim, run_sweep's jax engine, run_cohort_fused, the fused sweep),
+including ragged final chunks, disruption traces, and ArrivalSpec inputs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArrivalSpec,
+    FleetEvent,
+    FleetScenario,
+    SimConfig,
+    SweepSpec,
+    build_topology,
+    container_costs,
+    diamond_app,
+    fat_tree,
+    linear_app,
+    run_cohort_fused,
+    run_sim,
+    run_sweep,
+    spout_rate_matrix,
+    t_heron_placement,
+)
+
+
+@pytest.fixture(scope="module")
+def system():
+    topo = build_topology(
+        [linear_app(3, parallelism=2, mu=8.0), diamond_app(parallelism=2, mu=8.0)],
+        gamma=64.0,
+    )
+    sd, _ = fat_tree(4)
+    net = container_costs("fat-tree", sd)
+    rates = spout_rate_matrix(topo, 2.0)
+    placement = t_heron_placement(topo, net, rates, max_per_container=8)
+    return topo, net, placement
+
+
+def _pow2_arrivals(topo, T, seed=0):
+    rng = np.random.default_rng(seed)
+    unit = spout_rate_matrix(topo, 1.0)
+    arr = (2.0 ** rng.integers(-1, 2, size=(T, *unit.shape))).astype(np.float32)
+    arr *= rng.random((T, *unit.shape)) < 0.8
+    return (arr * (unit > 0)).astype(np.float32)
+
+
+def _assert_simresults_equal(a, b):
+    for f in ("backlog", "comm_cost", "q_in_total", "q_out_total", "served_total"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+        )
+
+
+class TestRunSimChunked:
+    T = 160
+
+    @pytest.mark.parametrize("chunk", [48, 160, 1000])  # ragged, exact, > T
+    def test_bitwise_equal_to_monolithic(self, system, chunk):
+        topo, net, placement = system
+        cfg = SimConfig(window=2, scheduler="potus")
+        arr = _pow2_arrivals(topo, self.T + 3, seed=3)
+        mono = run_sim(topo, net, placement, arr, self.T, cfg)
+        chk = run_sim(topo, net, placement, arr, self.T, cfg, chunk=chunk)
+        _assert_simresults_equal(mono, chk)
+
+    def test_bitwise_under_disruption_trace(self, system):
+        topo, net, placement = system
+        cfg = SimConfig(window=1, scheduler="shuffle")
+        arr = _pow2_arrivals(topo, self.T + 2, seed=5)
+        trace = FleetScenario(
+            events=(
+                FleetEvent("failure", start=30, end=70, instances=(2,)),
+                FleetEvent("straggler", start=80, end=110, instances=(3,), factor=0.25),
+            )
+        ).compile(topo, self.T)
+        mono = run_sim(topo, net, placement, arr, self.T, cfg, events=trace)
+        chk = run_sim(topo, net, placement, arr, self.T, cfg, events=trace, chunk=37)
+        _assert_simresults_equal(mono, chk)
+
+    def test_arrival_spec_chunked(self, system):
+        topo, net, placement = system
+        cfg = SimConfig(window=1)
+        spec = ArrivalSpec(kind="mmpp", seed=4, rate_per_stream=2.0,
+                           params={"rate_ratio": 6.0})
+        mono = run_sim(topo, net, placement, spec, 128, cfg)
+        chk = run_sim(topo, net, placement, spec, 128, cfg, chunk=50)
+        _assert_simresults_equal(mono, chk)
+
+    def test_chunk_validated(self, system):
+        topo, net, placement = system
+        arr = _pow2_arrivals(topo, 20, seed=0)
+        with pytest.raises(ValueError, match="chunk"):
+            run_sim(topo, net, placement, arr, 16, SimConfig(), chunk=0)
+
+
+class TestSweepChunked:
+    def test_jax_engine_bitwise(self, system):
+        topo, net, placement = system
+        T = 120
+        arr = _pow2_arrivals(topo, T + 3, seed=3)
+        arrs = {"base": arr, "alt": _pow2_arrivals(topo, T + 3, seed=9)}
+        spec = SweepSpec(V=(1.0, 3.0), window=(0, 2), scheduler=("potus", "shuffle"),
+                         arrival=("base", "alt"))
+        mono = run_sweep(topo, net, placement, arrs, T, spec)
+        chk = run_sweep(topo, net, placement, arrs, T, spec, engine_opts={"chunk": 48})
+        assert len(mono) == len(chk) == 16
+        for (scn_a, res_a), (scn_b, res_b) in zip(mono, chk):
+            assert scn_a == scn_b
+            _assert_simresults_equal(res_a, res_b)
+
+    def test_jax_engine_events_axis_bitwise(self, system):
+        topo, net, placement = system
+        T = 96
+        arr = _pow2_arrivals(topo, T + 2, seed=1)
+        scenarios = {
+            "calm": FleetScenario(),
+            "storm": FleetScenario(events=(FleetEvent("failure", start=20, end=50,
+                                                      instances=(2, 3)),)),
+        }
+        spec = SweepSpec(window=(1,), events=("calm", "storm"))
+        mono = run_sweep(topo, net, placement, arr, T, spec, events=scenarios)
+        chk = run_sweep(topo, net, placement, arr, T, spec, events=scenarios,
+                        engine_opts={"chunk": 25})
+        for (_, res_a), (_, res_b) in zip(mono, chk):
+            _assert_simresults_equal(res_a, res_b)
+
+    def test_cohort_engine_rejects_chunk(self, system):
+        topo, net, placement = system
+        arr = _pow2_arrivals(topo, 40, seed=0)
+        with pytest.raises(ValueError, match="chunk"):
+            run_sweep(topo, net, placement, arr, 32, SweepSpec(), engine="cohort",
+                      engine_opts={"chunk": 16})
+
+
+class TestFusedChunked:
+    T = 160
+
+    @pytest.mark.parametrize("scheduler", ["potus", "shuffle"])
+    def test_bitwise_equal_to_monolithic(self, system, scheduler):
+        topo, net, placement = system
+        cfg = SimConfig(V=2.0, beta=0.5, window=2, scheduler=scheduler)
+        arr = _pow2_arrivals(topo, self.T + 3, seed=3)
+        mono = run_cohort_fused(topo, net, placement, arr, None, self.T, cfg,
+                                age_cap=48)
+        chk = run_cohort_fused(topo, net, placement, arr, None, self.T, cfg,
+                               age_cap=48, chunk=48)
+        np.testing.assert_array_equal(mono.backlog, chk.backlog)
+        np.testing.assert_array_equal(mono.comm_cost, chk.comm_cost)
+        assert mono.avg_response == chk.avg_response
+        assert mono.p95_response == chk.p95_response
+        assert mono.completed_mass == chk.completed_mass
+        assert mono.saturated_frac == chk.saturated_frac
+        assert mono.n_cohorts == chk.n_cohorts
+
+    def test_fused_sweep_chunked_bitwise(self, system):
+        topo, net, placement = system
+        T = 120
+        arr = _pow2_arrivals(topo, T + 3, seed=3)
+        spec = SweepSpec(V=(1.0, 2.0), window=(0, 2), scheduler=("potus", "shuffle"))
+        mono = run_sweep(topo, net, placement, arr, T, spec, engine="cohort-fused",
+                         engine_opts={"age_cap": 40})
+        chk = run_sweep(topo, net, placement, arr, T, spec, engine="cohort-fused",
+                        engine_opts={"age_cap": 40, "chunk": 37})
+        for (scn_a, res_a), (scn_b, res_b) in zip(mono, chk):
+            assert scn_a == scn_b
+            np.testing.assert_array_equal(res_a.backlog, res_b.backlog)
+            np.testing.assert_array_equal(res_a.comm_cost, res_b.comm_cost)
+            assert res_a.avg_response == res_b.avg_response
+            assert res_a.completed_mass == res_b.completed_mass
+
+    def test_chunk_validated(self, system):
+        topo, net, placement = system
+        arr = _pow2_arrivals(topo, 20, seed=0)
+        with pytest.raises(ValueError, match="chunk"):
+            run_cohort_fused(topo, net, placement, arr, None, 16, SimConfig(),
+                             chunk=-3)

@@ -1,0 +1,216 @@
+"""Statistical contracts for the heavy-traffic generators (DESIGN.md §11.1).
+
+Every generator behind ``ArrivalSpec`` promises the same three things:
+
+1. **Rate honesty** — the modulation series has mean 1, so the empirical
+   per-stream rate converges to the requested ``rates`` regardless of how
+   bursty the shape is. A generator that silently inflates load would make
+   every "POTUS wins under burstiness" figure meaningless.
+2. **Shape honesty** — the advertised burstiness is really there: a Hill
+   estimator recovers the Pareto tail index from the slot counts, MMPP's
+   index of dispersion (Var/Mean) sits far above Poisson's ~1, and
+   ``trace_replay`` reproduces a recorded tensor bit-for-bit.
+3. **Structure** — integer counts, spout-stream support only, lam_max
+   respected, invalid parameters rejected eagerly.
+
+Deterministic seeded checks always run (tier 1); hypothesis widens the
+same properties over random parameters when installed (the nightly
+guarantees it).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArrivalSpec,
+    build_topology,
+    diurnal_flash_arrivals,
+    linear_app,
+    lognormal_arrivals,
+    mmpp_arrivals,
+    pareto_arrivals,
+    poisson_arrivals,
+    spout_rate_matrix,
+    trace_replay,
+)
+from repro.core.workload import GENERATORS
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return build_topology([linear_app(3, parallelism=2, mu=8.0)], gamma=64.0)
+
+
+def _stream_mask(topo):
+    return spout_rate_matrix(topo, 1.0) > 0
+
+
+def _hill(samples: np.ndarray, k: int) -> float:
+    """Hill estimator of the tail index from the top-k order statistics."""
+    srt = np.sort(samples)[::-1]
+    top, pivot = srt[:k], srt[k]
+    return 1.0 / np.mean(np.log(top / pivot))
+
+
+class TestRateHonesty:
+    """Long-run empirical rate matches the requested rate per stream."""
+
+    T = 20_000
+
+    @pytest.mark.parametrize("kind", sorted(GENERATORS))
+    def test_empirical_rate_matches(self, topo, kind):
+        rates = spout_rate_matrix(topo, 3.0)
+        rng = np.random.default_rng(42)
+        kwargs = {}
+        if kind == "trace-replay":
+            kwargs["trace"] = 3.0 + 2.0 * np.sin(np.linspace(0, 20, 500))
+        arr = GENERATORS[kind](rng, rates, self.T, **kwargs)
+        assert arr.shape == (self.T, topo.n_instances, topo.n_components)
+        assert np.array_equal(arr, np.round(arr)) and (arr >= 0).all()
+        mask = _stream_mask(topo)
+        emp = arr.mean(axis=0)
+        # heavy-tailed modulation converges slowly; 10% is still tight
+        # enough to catch any systematic rate inflation
+        tol = 0.10 if kind == "pareto" else 0.05
+        np.testing.assert_allclose(emp[mask], rates[mask], rtol=tol)
+        assert (emp[~mask] == 0).all()
+
+    def test_lam_max_caps_slot_rates(self, topo):
+        rates = spout_rate_matrix(topo, 4.0)
+        rng = np.random.default_rng(0)
+        arr = pareto_arrivals(rng, rates, 5000, alpha=1.2, lam_max=6.0)
+        # Poisson(λ≤6) essentially never exceeds ~30; an uncapped Pareto
+        # burst at alpha=1.2 routinely would
+        assert arr.max() < 40
+
+
+class TestShapeHonesty:
+    def test_pareto_tail_index_recovered(self, topo):
+        """Hill estimator on slot totals recovers alpha: mixing a Poisson
+        with a regularly-varying modulation preserves the tail index."""
+        alpha = 1.6
+        rates = spout_rate_matrix(topo, 5.0)
+        rng = np.random.default_rng(7)
+        arr = pareto_arrivals(rng, rates, 60_000, alpha=alpha)
+        totals = arr.sum(axis=(1, 2))
+        est = _hill(totals[totals > 0], k=600)
+        assert 1.2 < est < 2.1, f"Hill estimate {est:.2f} far from alpha={alpha}"
+
+    def test_mmpp_overdispersed_vs_poisson(self, topo):
+        rates = spout_rate_matrix(topo, 3.0)
+        T = 30_000
+        mm = mmpp_arrivals(np.random.default_rng(1), rates, T, rate_ratio=8.0)
+        po = poisson_arrivals(np.random.default_rng(1), rates, T)
+
+        def iod(a):
+            tot = a.sum(axis=(1, 2))
+            return tot.var() / tot.mean()
+
+        assert abs(iod(po) - 1.0) < 0.25  # Poisson: Var = Mean
+        assert iod(mm) > 3.0 * iod(po)  # MMPP: strongly overdispersed
+
+    def test_lognormal_heavier_than_poisson(self, topo):
+        rates = spout_rate_matrix(topo, 3.0)
+        T = 30_000
+        ln = lognormal_arrivals(np.random.default_rng(2), rates, T, sigma=1.5)
+        po = poisson_arrivals(np.random.default_rng(2), rates, T)
+        q = 0.999
+        assert np.quantile(ln.sum(axis=(1, 2)), q) > 1.5 * np.quantile(
+            po.sum(axis=(1, 2)), q
+        )
+
+    def test_diurnal_flash_has_period_and_spikes(self, topo):
+        rates = spout_rate_matrix(topo, 4.0)
+        arr = diurnal_flash_arrivals(
+            np.random.default_rng(3), rates, 8000, period=200, depth=0.6,
+            flash_prob=0.02, flash_scale=6.0,
+        )
+        tot = arr.sum(axis=(1, 2))
+        # the sinusoid shows up as a strong autocorrelation at one period
+        x = tot - tot.mean()
+        ac = (x[:-200] * x[200:]).mean() / x.var()
+        assert ac > 0.2
+        assert tot.max() > 3.0 * tot.mean()  # flash crowds poke through
+
+    def test_trace_replay_round_trip_exact(self, topo):
+        """A recorded (T0, I, C) tensor replays bit-for-bit."""
+        rng = np.random.default_rng(4)
+        recorded = poisson_arrivals(rng, spout_rate_matrix(topo, 2.0), 300)
+        out = trace_replay(np.random.default_rng(9), spout_rate_matrix(topo, 2.0),
+                           200, trace=recorded)
+        np.testing.assert_array_equal(out, recorded[:200])
+
+    def test_trace_replay_tiles_past_the_recording(self, topo):
+        rng = np.random.default_rng(4)
+        recorded = poisson_arrivals(rng, spout_rate_matrix(topo, 2.0), 100)
+        out = trace_replay(np.random.default_rng(9), spout_rate_matrix(topo, 2.0),
+                           250, trace=recorded)
+        np.testing.assert_array_equal(out[:100], recorded)
+        np.testing.assert_array_equal(out[100:200], recorded)
+        np.testing.assert_array_equal(out[200:], recorded[:50])
+
+
+class TestArrivalSpec:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown arrival kind"):
+            ArrivalSpec(kind="fractal")
+
+    def test_generate_is_deterministic_in_seed(self, topo):
+        a = ArrivalSpec(kind="mmpp", seed=5, rate_per_stream=2.0).generate(topo, 500)
+        b = ArrivalSpec(kind="mmpp", seed=5, rate_per_stream=2.0).generate(topo, 500)
+        c = ArrivalSpec(kind="mmpp", seed=6, rate_per_stream=2.0).generate(topo, 500)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_rates_for_prefers_explicit_rate(self, topo):
+        spec = ArrivalSpec(rate_per_stream=2.5)
+        np.testing.assert_array_equal(spec.rates_for(topo), spout_rate_matrix(topo, 2.5))
+        util = ArrivalSpec(utilization=0.5).rates_for(topo)
+        assert util[_stream_mask(topo)].min() > 0
+
+    def test_params_reach_the_generator(self, topo):
+        tame = ArrivalSpec(kind="pareto", seed=0, rate_per_stream=3.0,
+                           params={"alpha": 3.0}).generate(topo, 20_000)
+        wild = ArrivalSpec(kind="pareto", seed=0, rate_per_stream=3.0,
+                           params={"alpha": 1.2}).generate(topo, 20_000)
+        assert wild.max() > 2.0 * tame.max()
+
+    def test_invalid_generator_params_raise(self, topo):
+        rates = spout_rate_matrix(topo, 1.0)
+        with pytest.raises(ValueError):
+            pareto_arrivals(np.random.default_rng(0), rates, 10, alpha=1.0)
+        with pytest.raises(ValueError):
+            mmpp_arrivals(np.random.default_rng(0), rates, 10, rate_ratio=1.0)
+
+    def test_spec_is_frozen(self):
+        spec = ArrivalSpec()
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            spec.kind = "pareto"
+
+
+class TestHypothesisProperties:
+    def test_property_rate_honesty_across_generators(self):
+        pytest.importorskip(
+            "hypothesis", reason="hypothesis not installed (pip install -e .[test])"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        topo = build_topology([linear_app(3, parallelism=2, mu=8.0)], gamma=64.0)
+        mask = _stream_mask(topo)
+
+        @given(
+            kind=st.sampled_from(sorted(set(GENERATORS) - {"trace-replay"})),
+            seed=st.integers(0, 10_000),
+            rate=st.floats(0.5, 8.0),
+        )
+        @settings(max_examples=25, deadline=None)
+        def check(kind, seed, rate):
+            spec = ArrivalSpec(kind=kind, seed=seed, rate_per_stream=rate)
+            arr = spec.generate(topo, 20_000)
+            assert np.array_equal(arr, np.round(arr)) and (arr >= 0).all()
+            emp = arr.mean(axis=0)
+            np.testing.assert_allclose(emp[mask], rate, rtol=0.2)
+            assert (emp[~mask] == 0).all()
+
+        check()
