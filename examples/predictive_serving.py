@@ -12,9 +12,9 @@ import numpy as np
 
 from repro.core import (
     Component,
-    SimConfig,
+    EngineSpec,
     build_topology,
-    run_cohort_sim,
+    simulate,
 )
 from repro.core.network import NetworkCosts
 from repro.core.prediction import ewma_predict
@@ -42,22 +42,23 @@ def main() -> None:
     arrivals = np.zeros((T + 40, topo.n_instances, topo.n_components), np.float32)
     arrivals[:, 0, 1] = rng.poisson(lam)
 
+    def spec(**kw):
+        return EngineSpec(topo=topo, net=net, placement=placement,
+                          arrivals=arrivals, T=T, engine="cohort", V=0.5, **kw)
+
     print("bursty traffic (2 req/slot baseline, 7 req/slot bursts), replicas 6/3/1.5 req/slot\n")
     for W in (0, 1, 2, 4, 8):
-        r = run_cohort_sim(topo, net, placement, arrivals, None, T,
-                           SimConfig(V=0.5, beta=1.0, window=W))
+        r = simulate(spec(window=W))
         print(f"  perfect prediction W={W}: avg response {r.avg_response:5.2f} slots "
               f"(p95 {r.p95_response:5.1f}), comm cost {r.avg_cost:5.1f}/slot")
 
     # imperfect (EWMA) prediction of the bursty stream
     pred = np.zeros_like(arrivals)
     pred[:, 0, 1] = np.maximum(np.rint(ewma_predict(arrivals[:, 0, 1], alpha=0.5)), 0)
-    r = run_cohort_sim(topo, net, placement, arrivals, pred, T,
-                       SimConfig(V=0.5, beta=1.0, window=2))
+    r = simulate(spec(window=2, predicted=pred))
     print(f"  EWMA prediction    W=2: avg response {r.avg_response:5.2f} slots "
           f"(p95 {r.p95_response:5.1f})")
-    sh = run_cohort_sim(topo, net, placement, arrivals, None, T,
-                        SimConfig(V=0.5, scheduler="shuffle"))
+    sh = simulate(spec(scheduler="shuffle"))
     print(f"  Shuffle (Heron default): avg response {sh.avg_response:5.2f} slots "
           f"(p95 {sh.p95_response:5.1f})")
 

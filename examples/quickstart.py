@@ -9,15 +9,14 @@ effect on response time (Fig. 4's headline).
 import numpy as np
 
 from repro.core import (
-    SimConfig,
+    EngineSpec,
     build_topology,
     container_costs,
     fat_tree,
     feasible_rates,
     poisson_arrivals,
     random_apps,
-    run_cohort_sim,
-    run_sim,
+    simulate,
     t_heron_placement,
 )
 
@@ -35,21 +34,23 @@ def main() -> None:
     T = 400
     arrivals = poisson_arrivals(rng, rates, T + 40)
 
+    def spec(**kw):
+        return EngineSpec(topo=topo, net=net, placement=placement,
+                          arrivals=arrivals, T=T, **kw)
+
     print("\n-- communication cost & backlog (V trade-off, Fig. 5) --")
     for V in (1.0, 10.0, 50.0):
-        r = run_sim(topo, net, placement, arrivals, T, SimConfig(V=V, window=0))
+        r = simulate(spec(engine="jax", V=V))
         print(f"  POTUS V={V:5.1f}: cost={r.avg_cost:7.1f}  backlog={r.avg_backlog:7.0f}")
-    s = run_sim(topo, net, placement, arrivals, T, SimConfig(V=1.0, scheduler="shuffle"))
+    s = simulate(spec(engine="jax", V=1.0, scheduler="shuffle"))
     print(f"  Shuffle      : cost={s.avg_cost:7.1f}  backlog={s.avg_backlog:7.0f}")
 
     print("\n-- response time vs lookahead window (Fig. 4) --")
     for W in (0, 2, 6, 12):
-        r = run_cohort_sim(topo, net, placement, arrivals, None, T,
-                           SimConfig(V=1.0, window=W))
+        r = simulate(spec(engine="cohort", V=1.0, window=W))
         print(f"  POTUS W={W:2d}: avg response = {r.avg_response:5.2f} slots "
               f"(p95 {r.p95_response:5.1f})")
-    sh = run_cohort_sim(topo, net, placement, arrivals, None, T,
-                        SimConfig(V=1.0, scheduler="shuffle"))
+    sh = simulate(spec(engine="cohort", V=1.0, scheduler="shuffle"))
     print(f"  Shuffle   : avg response = {sh.avg_response:5.2f} slots")
 
 

@@ -3,7 +3,8 @@
 Builds the paper's §5.1 system, then sweeps the Lyapunov weight V, the
 lookahead window W and the scheduler in a single :func:`repro.core.run_sweep`
 call — every scenario that shares a compiled structure (scheduler, W) runs
-inside one vmapped ``lax.scan``. Compare with looping ``run_sim`` N times.
+inside one vmapped ``lax.scan``. Compare with looping single-scenario
+``simulate(EngineSpec(...))`` calls N times.
 
   PYTHONPATH=src python examples/sweep_grid.py
 """
@@ -12,14 +13,15 @@ import time
 import numpy as np
 
 from repro.core import (
+    EngineSpec,
     SweepSpec,
     build_topology,
     container_costs,
     fat_tree,
     feasible_rates,
     random_apps,
-    run_sim,
     run_sweep,
+    simulate,
     t_heron_placement,
     trace_synthetic,
 )
@@ -54,18 +56,25 @@ def main() -> None:
         print(f"{scn.scheduler:>9} {scn.window:>3} {scn.V:>6.1f} "
               f"{res.avg_backlog:>9.0f} {res.avg_cost:>8.1f}")
 
-    # warm timing: one batched call vs N sequential run_sim calls
+    # warm timing: one batched call vs N sequential single-scenario calls
     # (warm the sequential path's compiles too, one per (scheduler, W) combo)
+    def one(scn):
+        cfg = scn.config()
+        return simulate(EngineSpec(
+            topo=topo, net=net, placement=placement, arrivals=arrivals, T=T,
+            engine="jax", scheduler=cfg.scheduler, V=cfg.V, beta=cfg.beta,
+            window=cfg.window))
+
     for scn in {(s.scheduler, s.window): s for s in spec.scenarios()}.values():
-        run_sim(topo, net, placement, arrivals, T, scn.config())
+        one(scn)
     t0 = time.perf_counter()
     run_sweep(topo, net, placement, arrivals, T, spec)
     t_batch = time.perf_counter() - t0
     t0 = time.perf_counter()
     for scn in spec.scenarios():
-        run_sim(topo, net, placement, arrivals, T, scn.config())
+        one(scn)
     t_seq = time.perf_counter() - t0
-    print(f"\nwarm: batched {t_batch:.2f}s vs {len(sweep)} sequential run_sim "
+    print(f"\nwarm: batched {t_batch:.2f}s vs {len(sweep)} sequential simulate "
           f"calls {t_seq:.2f}s ({t_seq / t_batch:.2f}x)")
 
 

@@ -9,6 +9,7 @@ from . import prediction
 from .baselines import jsq_schedule, shuffle_schedule
 from .cohort import CohortResult, run_cohort_sim
 from .cohort_fused import AgeCapSaturationWarning, run_cohort_fused
+from .engine import ENGINES, OPTION_SUPPORT, EngineSpec, UnsupportedEngineOption, simulate
 from .eventsim import EventSimResult, run_event_sim
 from .events import (
     EventTrace,
@@ -50,6 +51,7 @@ __all__ = [
     "shuffle_schedule", "jsq_schedule",
     "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
     "SimConfig", "SimResult", "run_sim", "sim_step",
+    "EngineSpec", "UnsupportedEngineOption", "simulate", "ENGINES", "OPTION_SUPPORT",
     "instance_mesh", "run_sim_sharded", "sharded_schedule",
     "CohortResult", "run_cohort_sim", "run_cohort_fused", "AgeCapSaturationWarning",
     "EventSimResult", "run_event_sim",

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cohort import CohortResult
+from .compact import COMPACT_SCHEDULERS, StepConsts, compact_slot_step
 from .network import NetworkCosts
 from .potus import caps_for_slot, make_problem
 from .simulator import (
@@ -136,6 +137,7 @@ class _Compact:
     valid: np.ndarray  # (I, S) f32 — 1 where the slot is a real successor
     sel_cmp: np.ndarray  # (I, S) f32 — selectivity toward each successor
     stream_cmp: np.ndarray  # (I, S) f32 — valid & spout row (window streams)
+    adj_rows: np.ndarray  # (I, C) f32 — 1 where comp(i) -> c is a DAG edge
 
 
 def _compact(topo: Topology) -> _Compact:
@@ -145,6 +147,7 @@ def _compact(topo: Topology) -> _Compact:
     succ_map = np.full((I, S), C, np.int32)
     valid = np.zeros((I, S), np.float32)
     sel_cmp = np.zeros((I, S), np.float32)
+    adj_rows = np.zeros((I, C), np.float32)
     edges = []
     for c in range(C):
         rows = topo.instances_of(c)
@@ -163,8 +166,9 @@ def _compact(topo: Topology) -> _Compact:
             succ_map[rs:re, s] = c2
             valid[rs:re, s] = 1.0
             sel_cmp[rs:re, s] = topo.selectivity[c, c2]
+            adj_rows[rs:re, c2] = 1.0
     stream_cmp = valid * is_spout[:, None].astype(np.float32)
-    return _Compact(S, tuple(edges), succ_map, valid, sel_cmp, stream_cmp)
+    return _Compact(S, tuple(edges), succ_map, valid, sel_cmp, stream_cmp, adj_rows)
 
 
 def _fused_step(
@@ -322,7 +326,8 @@ def _fused_step(
 
 
 @partial(jax.jit, static_argnames=("edges", "scheduler", "use_pallas", "age_cap",
-                                   "n_components", "shared_inputs", "events_shared"),
+                                   "n_components", "shared_inputs", "events_shared",
+                                   "slots_per_launch"),
          donate_argnames=("states",))
 def _scan_cohort_fused(
     prob,
@@ -335,6 +340,7 @@ def _scan_cohort_fused(
     valid_cmp: jax.Array,  # (I, S)
     succ_map: jax.Array,  # (I, S) int32
     term_f: jax.Array,  # (I,)
+    adj_rows: jax.Array,  # (I, C)
     actual_s: jax.Array,  # (S?, Tc, I, C) actual arrivals (unbatched if shared)
     pred_s: jax.Array,  # (S?, Tc, I, C) predictions for the chunk's slots
     nxt_s: jax.Array,  # (S?, Tc, I, C) predictions entering the window (t+W+1)
@@ -348,6 +354,7 @@ def _scan_cohort_fused(
     n_components: int = 1,
     shared_inputs: bool = False,
     events_shared: bool = False,
+    slots_per_launch: int = 1,
 ):
     """Scan one chunk of slots for every scenario in the batch.
 
@@ -355,18 +362,83 @@ def _scan_cohort_fused(
     explicit input/output so a chunked run can thread it through repeated
     calls at fixed device memory — the input buffers are donated to the next
     chunk. The monolithic run is the single-chunk case of the same function.
+
+    Scheduler routing (DESIGN.md §12): every scheduler in
+    :data:`~repro.core.compact.COMPACT_SCHEDULERS` runs the one-dispatch
+    :func:`~repro.core.compact.compact_slot_step` — no (I, I) tensor in the
+    slot loop, and price computation batches across the vmapped sweep axis.
+    Under ``use_pallas`` the POTUS step additionally fuses into the
+    ``kernels/potus_slot.py`` slot kernel (``slots_per_launch`` slots per
+    launch — the megakernel); the kernel falls back to the compact XLA step
+    when a disruption trace is present (per-slot caps re-fold the problem).
+    ``potus-loop`` keeps the dense reference path (and, under ``use_pallas``,
+    the ``cohort_drain`` kernel).
     """
-    sched = _get_scheduler(scheduler, use_pallas)
-    u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
     comp_onehot = jax.nn.one_hot(prob.inst_comp, n_components, dtype=mu.dtype)
+    compact = scheduler in COMPACT_SCHEDULERS
+    kernel_path = (compact and use_pallas and scheduler == "potus"
+                   and events_s is None)
+    if not compact:
+        sched = _get_scheduler(scheduler, use_pallas)
+        u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
 
     def one(state, actual, pred, nxt, V, beta, ev):
         T = actual.shape[0]
-        step = partial(
-            _fused_step, prob, sched, edges, U, u_pair, mu, inv_service, sel_cmp,
-            stream_cmp, valid_cmp, succ_map, term_f, comp_onehot, age_cap, use_pallas,
-            V, beta,
-        )
+        if compact:
+            consts = StepConsts(
+                U=U, mu=mu, inv_service=inv_service, sel_cmp=sel_cmp,
+                stream_cmp=stream_cmp, valid_cmp=valid_cmp, succ_map=succ_map,
+                term_f=term_f, comp_onehot=comp_onehot,
+                inst_comp=prob.inst_comp, inst_cont=prob.inst_container,
+                gamma=prob.gamma,
+                comp_count=prob.comp_count.astype(mu.dtype),
+                spout_f=prob.is_spout.astype(mu.dtype),
+                adj_rows=adj_rows, V=V, beta=beta,
+            )
+        if kernel_path and ev is None:
+            from repro.kernels import ops as kops
+
+            K = max(1, slots_per_launch)
+            nb, tail = T // K, T % K
+
+            def launch(state, xs_b, n_slots):
+                act_b, pred_b, nxt_b, t0 = xs_b
+                return kops.potus_slot_step(
+                    consts, state, act_b, pred_b, nxt_b, t0,
+                    scheduler=scheduler, age_cap=age_cap, n_slots=n_slots,
+                )
+
+            mets = []
+            if nb:
+                blk = (actual[: nb * K].reshape(nb, K, *actual.shape[1:]),
+                       pred[: nb * K].reshape(nb, K, *pred.shape[1:]),
+                       nxt[: nb * K].reshape(nb, K, *nxt.shape[1:]),
+                       jnp.arange(nb, dtype=jnp.int32) * K)
+                state, m = jax.lax.scan(partial(launch, n_slots=K), state, blk)
+                mets.append(jax.tree.map(lambda y: y.reshape(nb * K), m))
+            if tail:
+                state, m = launch(
+                    state,
+                    (actual[nb * K:], pred[nb * K:], nxt[nb * K:],
+                     jnp.int32(nb * K)),
+                    n_slots=tail,
+                )
+                mets.append(m)
+            backlog, cost, capped, served = (
+                jax.tree.map(lambda *ys: jnp.concatenate(ys), *mets)
+                if len(mets) > 1 else mets[0]
+            )
+            return state, (backlog, cost, capped.sum(), served.sum())
+        if compact:
+            def step(st, x):
+                return compact_slot_step(consts, st, x, scheduler=scheduler,
+                                         age_cap=age_cap)
+        else:
+            step = partial(
+                _fused_step, prob, sched, edges, U, u_pair, mu, inv_service,
+                sel_cmp, stream_cmp, valid_cmp, succ_map, term_f, comp_onehot,
+                age_cap, use_pallas, V, beta,
+            )
         xs = (actual, pred, nxt, jnp.arange(T))
         if ev is not None:
             xs = xs + (ev,)
@@ -503,6 +575,7 @@ def _device_inputs(topo: Topology, net: NetworkCosts, cpt: _Compact, service=Non
         valid_cmp=jnp.asarray(cpt.valid),
         succ_map=jnp.asarray(cpt.succ_map),
         term_f=jnp.asarray(_terminal_mask(topo)),
+        adj_rows=jnp.asarray(cpt.adj_rows),
     )
 
 
@@ -526,6 +599,7 @@ def _run_chunked_cohort(
     T: int,
     W: int,
     chunk: int | None,
+    slots_per_launch: int = 1,
 ):
     """Stream the fused scan ``chunk`` slots at a time (DESIGN.md §11.2).
 
@@ -589,6 +663,7 @@ def _run_chunked_cohort(
             age_cap=age_cap,
             n_components=n_components,
             shared_inputs=shared,
+            slots_per_launch=slots_per_launch,
             **dev,
         )
         carry = states[:5]
@@ -611,7 +686,7 @@ def _run_chunked_cohort(
     )
 
 
-def run_cohort_fused(
+def _run_cohort_fused_impl(
     topo: Topology,
     net: NetworkCosts,
     inst_container: np.ndarray,
@@ -625,6 +700,7 @@ def run_cohort_fused(
     events=None,  # EventTrace | None — disruption trace (core.events, DESIGN.md §9)
     service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
     chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
+    slots_per_launch: int = 1,  # megakernel: slots fused per kernel launch (DESIGN.md §12)
 ) -> CohortResult:
     """Drop-in fused replacement for :func:`repro.core.cohort.run_cohort_sim`.
 
@@ -649,6 +725,8 @@ def run_cohort_fused(
         raise ValueError(f"age_cap must be >= 2, got {age_cap}")
     if chunk is not None and chunk <= 0:
         raise ValueError(f"chunk must be a positive slot count, got {chunk}")
+    if slots_per_launch < 1:
+        raise ValueError(f"slots_per_launch must be >= 1, got {slots_per_launch}")
     W = cfg.window
     actual = materialize_arrivals(actual, topo, T + W + 1)
     prob = make_problem(topo, net, inst_container)
@@ -659,7 +737,7 @@ def run_cohort_fused(
         prob, _device_inputs(topo, net, cpt, service), cpt,
         cfg.scheduler, cfg.use_pallas, age_cap, topo.n_components,
         True, act, pred, nxt, q_rem0, [cfg.V], [cfg.beta],
-        host_trace(events, T), True, T, W, chunk,
+        host_trace(events, T), True, T, W, chunk, slots_per_launch,
     )
     weights = np.einsum("sic,ic->cs", act, mask)
     sat = float(capped[0]) / max(float(served[0]), 1e-9)
@@ -669,6 +747,20 @@ def run_cohort_fused(
         backlog[0], cost[0], sat, float(served[0]),
         T, W, warmup, drain_margin,
     )
+
+
+def run_cohort_fused(*args, **kwargs) -> CohortResult:
+    """Deprecated alias of the fused cohort engine entry point — use
+    :func:`repro.core.simulate` with an :class:`~repro.core.engine.EngineSpec`
+    (``engine="cohort-fused"``). Thin shim, removed one release after the
+    unified facade landed (DESIGN.md §12)."""
+    warnings.warn(
+        "run_cohort_fused(...) is deprecated; use "
+        "repro.core.simulate(EngineSpec(engine='cohort-fused', ...))",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _run_cohort_fused_impl(*args, **kwargs)
 
 
 def run_fused_sweep(
@@ -684,6 +776,7 @@ def run_fused_sweep(
     events_map: dict | None = None,  # name -> EventTrace|None, from sweep normalization
     service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
     chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
+    slots_per_launch: int = 1,  # megakernel: slots fused per kernel launch (DESIGN.md §12)
 ) -> tuple[list[CohortResult], int]:
     """Run a whole :class:`repro.core.sweep.SweepSpec` grid on the fused
     engine: scenarios partition by (scheduler, window, use_pallas, and
@@ -693,6 +786,8 @@ def run_fused_sweep(
     Python scenarios. Returns (results in grid order, n_batches)."""
     if age_cap < 2:
         raise ValueError(f"age_cap must be >= 2, got {age_cap}")
+    if slots_per_launch < 1:
+        raise ValueError(f"slots_per_launch must be >= 1, got {slots_per_launch}")
     scenarios = spec.scenarios()
     # raising lookup, like arr_map: a named trace missing from the map is a
     # caller error, not an undisturbed run silently labeled as disturbed
@@ -737,7 +832,7 @@ def run_fused_sweep(
             prob, dev, cpt, scheduler, use_pallas, age_cap, topo.n_components,
             shared, act_s, pred_s, nxt_s, q0_s,
             [scn.V for scn in group], [scn.beta for scn in group],
-            ev_host, ev_shared, T, W, chunk,
+            ev_host, ev_shared, T, W, chunk, slots_per_launch,
         )
         for s, scn in enumerate(group):
             sat = float(capped[s]) / max(float(served[s]), 1e-9)

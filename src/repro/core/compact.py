@@ -1,0 +1,504 @@
+"""One-dispatch slot math for the fused cohort engine (DESIGN.md §12).
+
+The fused cohort engine's hot loop used to materialize the dense decision
+matrix ``X`` (I, I) every slot — price tile, greedy water-fill, per-edge
+column sums, and an (I, I) landing ratio — even though each scheduler's
+decision has at most one *point* target plus one *even spread* per
+(source instance, successor component) pair. This module re-expresses each
+per-slot scheduler decision in that **successor-component-compact** form:
+
+    CompactDecision(shipped, point, j_point, even_per, cost)
+
+* ``shipped[i, c]``  — total mass source ``i`` ships toward component ``c``;
+* ``point[i, c]``    — the part aimed at one instance ``j_point[i, c]``
+  (POTUS's cheapest candidate, JSQ's winner; ``I`` = no target);
+* ``even_per[i, c]`` — the part landing on *each* alive instance of ``c``
+  (the mandatory even split of eq. 4, shuffle's uniform dispatch);
+* ``cost``           — the slot's communication cost ``sum(X * u_pair)``.
+
+For POTUS the collapse is exact: within a component the candidate ordering
+over columns ``j`` is row-independent, because the row only enters the price
+``l[i,j] = (V·U[k_i,k_j] + q_in[j]) − β·q_out[i,c]`` through a per-(i, c)
+constant shift. The cheapest candidate per (container, component) —
+``M[k,c] = min_j (V·U[k,k_j] + q_in[j])`` with its argmin ``J[k,c]`` — is an
+O(K·I) reduction shared by all rows, and subtracting the constant afterwards
+commutes bitwise with the min (the selected element is identical; the
+``l < 0`` candidate filter applies after the shift, since if the cheapest
+candidate is non-negative every candidate in that component is). The one
+caveat: two *different* raw prices can round to the same shifted price, in
+which case the dense path's tie-break could pick the other column — impossible
+on the dyadic-arithmetic test tier, a 1-ulp event otherwise (same class as
+the documented POTUS split caveat, DESIGN.md §12).
+
+Every function here is pure ``jnp`` on plain arrays so the identical code
+runs (a) under the engine's ``lax.scan`` (XLA path) and (b) inside the Pallas
+fused-slot/megakernel bodies (``kernels/potus_slot.py``). ``kernel_safe=True``
+swaps the few ops Pallas TPU cannot lower — scatter/gather and ``lax.sort`` —
+for one-hot contractions, dynamic slices, and the O(C²) precedence-rank
+water-fill (the same substitution ``kernels/potus_schedule.py`` makes);
+both variants agree bitwise on the dyadic tier and to 1 ulp elsewhere.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .potus import _fill_components
+
+__all__ = [
+    "COMPACT_SCHEDULERS", "CompactProblem", "CompactDecision", "StepConsts",
+    "compact_decide", "compact_slot_step",
+]
+
+_EPS = 1e-12  # same negligible-mass threshold as the engines' FIFOs
+_INF = jnp.inf
+_BIG = 1e30  # finite stand-in for +inf ahead of one-hot contractions (0*inf = NaN)
+
+#: schedulers with a compact one-dispatch decision (``potus-loop`` keeps the
+#: dense reference path in ``core.cohort_fused``)
+COMPACT_SCHEDULERS = ("potus", "shuffle", "jsq")
+
+
+class CompactProblem(NamedTuple):
+    """Per-slot scheduling inputs, with any disruption caps already folded
+    (alive counts, effective gamma) — the compact analog of
+    ``potus.apply_caps`` without the (I, I) edge mask."""
+
+    inst_comp: jax.Array  # (I,) int32 — component of each instance
+    inst_cont: jax.Array  # (I,) int32 — container of each instance
+    gamma: jax.Array  # (I,) effective transmission budget
+    comp_count: jax.Array  # (C,) alive instances per component
+    adj_rows: jax.Array  # (I, C) 1.0 where comp(i) -> c is a DAG edge
+    alive: jax.Array  # (I,) 1.0 on alive instances
+
+
+class CompactDecision(NamedTuple):
+    shipped: jax.Array  # (I, C)
+    point: jax.Array  # (I, C) mass aimed at j_point
+    j_point: jax.Array  # (I, C) int32 target instance; I = none
+    even_per: jax.Array  # (I, C) mass landing on each alive instance of c
+    cost: jax.Array  # () communication cost of the slot
+
+
+def _onehot_cols(idx: jax.Array, n: int, dtype) -> jax.Array:
+    """(..., n) one-hot of ``idx`` via 2-D iota (Pallas-TPU lowerable)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (n,), idx.ndim)
+    return (idx[..., None] == iota).astype(dtype)
+
+
+def _colmin_per_comp(t1: jax.Array, inst_comp: jax.Array, C: int, kernel_safe: bool):
+    """Per-component column reduction of ``t1`` (K, I): value min ``M`` (K, C)
+    and lowest-index argmin ``J`` (K, C); ``I`` where a component is empty."""
+    K, I = t1.shape
+    if kernel_safe:
+        oh = _onehot_cols(inst_comp, C, jnp.bool_)  # (I, C)
+        # _BIG, not inf: M flows through one-hot contractions downstream
+        M = jnp.min(jnp.where(oh[None], t1[:, :, None], jnp.asarray(_BIG, t1.dtype)),
+                    axis=1)
+        iota_i = jax.lax.broadcasted_iota(jnp.int32, (K, I), 1)
+        hit = jnp.where(t1 == M[:, inst_comp], iota_i, I)
+        J = jnp.min(jnp.where(oh[None], hit[:, :, None], I), axis=1)
+        return M, J
+    M = jnp.full((K, C), _INF, t1.dtype).at[:, inst_comp].min(t1)
+    hit = jnp.where(t1 == M[:, inst_comp], jnp.arange(I, dtype=jnp.int32)[None, :], I)
+    J = jnp.full((K, C), I, jnp.int32).at[:, inst_comp].min(hit)
+    return M, J
+
+
+def _rows_of(A: jax.Array, inst_cont: jax.Array, kernel_safe: bool) -> jax.Array:
+    """(I, ...) = A[k_i, ...] — row gather, or its one-hot contraction (the
+    matmul sums one exact product plus zeros, so the two agree bitwise).
+    ``A`` must be finite: ``0 * inf`` would poison the contraction."""
+    if kernel_safe:
+        oh = _onehot_cols(inst_cont, A.shape[0], A.dtype)  # (I, K)
+        return jax.lax.dot_general(oh, A, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=A.dtype)
+    return A[inst_cont]
+
+
+def _u_cols(U: jax.Array, inst_cont: jax.Array, kernel_safe: bool) -> jax.Array:
+    """(K, I) = U[:, k_j]."""
+    if kernel_safe:
+        oh = _onehot_cols(inst_cont, U.shape[0], U.dtype)  # (I, K)
+        return jax.lax.dot_general(U, oh, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=U.dtype)
+    return U[:, inst_cont]
+
+
+def _u_col_sums(U: jax.Array, cp: CompactProblem, kernel_safe: bool) -> jax.Array:
+    """(K, C) per-component sums of alive columns of ``U[:, k_j]``."""
+    C = cp.comp_count.shape[0]
+    u_cols = _u_cols(U, cp.inst_cont, kernel_safe) * cp.alive[None, :]  # (K, I)
+    if kernel_safe:
+        oh = _onehot_cols(cp.inst_comp, C, U.dtype)  # (I, C)
+        return jax.lax.dot_general(u_cols, oh, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=U.dtype)
+    return jnp.zeros((U.shape[0], C), U.dtype).at[:, cp.inst_comp].add(u_cols)
+
+
+def _fill_rows_sort(m, j_c, budget, gamma):
+    """(I, C) sort-based water-fill, in component order (XLA path)."""
+    C = m.shape[1]
+
+    def one(m_r, j_r, b_r, g_r):
+        fill, _, perm = _fill_components(m_r, j_r, b_r, g_r)
+        return jnp.zeros((C,), fill.dtype).at[perm].set(fill)
+
+    return jax.vmap(one)(m, j_c, budget, gamma)
+
+
+def _fill_rows_rank(m, j_c, budget, gamma):
+    """(I, C) precedence-rank water-fill — the sort-free equivalent used
+    inside kernels (same substitution as ``kernels/potus_schedule.py``):
+    entry d precedes e iff ``(m_d, j_d) < (m_e, j_e)`` lexicographically, so
+    the budget mass ahead of each entry is one masked contraction instead of
+    a cumsum over a sorted axis. Agrees with the sort path bitwise whenever
+    the prefix sums round identically (always on the dyadic tier)."""
+    prec = (m[:, :, None] < m[:, None, :]) | (
+        (m[:, :, None] == m[:, None, :]) & (j_c[:, :, None] < j_c[:, None, :])
+    )  # (I, C, C): [i, d, e] = entry d precedes entry e
+    before = jax.lax.dot_general(
+        budget[:, None, :], prec.astype(budget.dtype),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=budget.dtype,
+    )[:, 0, :]  # (I, C) = sum_d budget[i, d] * prec[i, d, e]
+    after = before + budget
+    g = gamma[:, None]
+    return jnp.minimum(after, g) - jnp.minimum(before, g)
+
+
+def _potus_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
+    I = cp.inst_comp.shape[0]
+    C = cp.comp_count.shape[0]
+    edge = cp.adj_rows > 0.0
+    # shared per-(container, component) cheapest candidate: O(K·I), no (I, I).
+    # _BIG stands in for +inf so downstream one-hot contractions stay NaN-free;
+    # it only ever reaches entries whose budget is 0.
+    big = jnp.asarray(_BIG, U.dtype)
+    t1 = jnp.where((cp.alive > 0.0)[None, :],
+                   V * _u_cols(U, cp.inst_cont, kernel_safe) + q_in[None, :], big)
+    M, J = _colmin_per_comp(t1, cp.inst_comp, C, kernel_safe)
+    m_raw = _rows_of(M, cp.inst_cont, kernel_safe) - beta * q_out  # row-constant shift
+    cand = edge & (m_raw < 0.0)
+    m = jnp.where(cand, m_raw, _INF)
+    j_row = _rows_of(J.astype(U.dtype), cp.inst_cont, kernel_safe).astype(jnp.int32)
+    j_c = jnp.where(edge, j_row, I)
+    budget = jnp.where(cand, jnp.maximum(q_out, 0.0), 0.0)
+    fill_rows = _fill_rows_rank if kernel_safe else _fill_rows_sort
+    fill = fill_rows(m, j_c, budget, cp.gamma)
+    # mandatory dispatch (eq. 4): even split over the alive instances
+    can_even = edge & (cp.comp_count > 0.0)[None, :]
+    shortfall = jnp.where(can_even, jnp.maximum(must_send - fill, 0.0), 0.0)
+    even_per = shortfall / jnp.maximum(cp.comp_count, 1.0)[None, :]
+    # cost: the point part gathers U at the target, the even part uses the
+    # per-component alive-column sum of U — both O(I·C)
+    u_sum = _u_col_sums(U, cp, kernel_safe)  # (K, C)
+    if kernel_safe:
+        oh_j = _onehot_cols(j_c, I, U.dtype)  # (I, C, I); index I -> all-zero
+        k_jc = jnp.sum(oh_j * cp.inst_cont.astype(U.dtype)[None, None, :],
+                       axis=-1).astype(jnp.int32)  # (I, C); 0 where j_c == I
+        u_rows = _rows_of(U, cp.inst_cont, True)  # (I, K) = U[k_i, :]
+        u_point = jnp.sum(_onehot_cols(k_jc, U.shape[0], U.dtype)
+                          * u_rows[:, None, :], axis=-1)  # fill is 0 where j_c == I
+    else:
+        jc_safe = jnp.minimum(j_c, I - 1)
+        u_point = U[cp.inst_cont[:, None], cp.inst_cont[jc_safe]]
+    cost = (fill * u_point).sum() + (even_per * _rows_of(u_sum, cp.inst_cont,
+                                                         kernel_safe)).sum()
+    return CompactDecision(fill + shortfall, fill, j_c, even_per, cost)
+
+
+def _ship_amounts_compact(cp, q_out, must_send):
+    """Same gamma-throttled proportional shipment as ``baselines._ship_amounts``."""
+    total = q_out.sum(axis=1, keepdims=True)
+    scale = jnp.where(
+        total > 0, jnp.minimum(1.0, cp.gamma[:, None] / jnp.maximum(total, 1e-9)), 0.0
+    )
+    return jnp.maximum(q_out * scale, must_send)
+
+
+def _shuffle_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
+    I = cp.inst_comp.shape[0]
+    C = cp.comp_count.shape[0]
+    ship = _ship_amounts_compact(cp, q_out, must_send)
+    can = (cp.adj_rows > 0.0) & (cp.comp_count > 0.0)[None, :]
+    per_target = jnp.where(can, ship / jnp.maximum(cp.comp_count, 1.0)[None, :], 0.0)
+    shipped = per_target * cp.comp_count[None, :]
+    u_sum = _u_col_sums(U, cp, kernel_safe)  # (K, C)
+    cost = (per_target * _rows_of(u_sum, cp.inst_cont, kernel_safe)).sum()
+    zeros = jnp.zeros((I, C), ship.dtype)
+    return CompactDecision(shipped, zeros, jnp.full((I, C), I, jnp.int32), per_target, cost)
+
+
+def _jsq_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
+    I = cp.inst_comp.shape[0]
+    C = cp.comp_count.shape[0]
+    ship = _ship_amounts_compact(cp, q_out, must_send)
+    # winner[c] = argmin q_in over the alive instances of c (ties -> lowest)
+    cand = _onehot_cols(cp.inst_comp, C, jnp.bool_) & (cp.alive > 0.0)[:, None]  # (I, C)
+    masked_q = jnp.where(cand, q_in[:, None], _INF)
+    winner = jnp.argmin(masked_q, axis=0).astype(jnp.int32)  # (C,)
+    if kernel_safe:
+        oh_w = _onehot_cols(winner, I, U.dtype)  # (C, I)
+        win_alive = jnp.sum(oh_w * cp.alive[None, :], axis=1)
+        iota_c = jax.lax.broadcasted_iota(jnp.int32, (C, I), 0)
+        win_comp_ok = jnp.sum(
+            oh_w * (cp.inst_comp[None, :] == iota_c).astype(U.dtype), axis=1)
+        k_win = jnp.sum(oh_w * cp.inst_cont[None, :].astype(U.dtype),
+                        axis=1).astype(jnp.int32)  # (C,)
+        u_rows = _rows_of(U, cp.inst_cont, True)  # (I, K) = U[k_i, :]
+        u_win = jnp.sum(_onehot_cols(k_win, U.shape[0], U.dtype)[None, :, :]
+                        * u_rows[:, None, :], axis=-1)  # (I, C)
+        win_ok = (win_comp_ok > 0.0) & (win_alive > 0.0)
+    else:
+        win_ok = (cp.inst_comp[winner] == jnp.arange(C, dtype=jnp.int32)) & (
+            cp.alive[winner] > 0.0
+        )
+        u_win = U[cp.inst_cont[:, None], cp.inst_cont[winner][None, :]]  # (I, C)
+    can = (cp.adj_rows > 0.0) & win_ok[None, :]
+    shipped = jnp.where(can, ship, 0.0)
+    j_point = jnp.where(can, winner[None, :], I)
+    cost = (shipped * u_win).sum()
+    return CompactDecision(shipped, shipped, j_point, jnp.zeros_like(shipped), cost)
+
+
+_DECIDERS = {"potus": _potus_decide, "shuffle": _shuffle_decide, "jsq": _jsq_decide}
+
+
+def compact_decide(
+    scheduler: str,
+    cp: CompactProblem,
+    U: jax.Array,
+    q_in: jax.Array,
+    q_out: jax.Array,
+    must_send: jax.Array,
+    V,
+    beta,
+    kernel_safe: bool = False,
+) -> CompactDecision:
+    """One slot's scheduling decision in compact form; ``scheduler`` must be
+    in :data:`COMPACT_SCHEDULERS`."""
+    return _DECIDERS[scheduler](cp, U, q_in, q_out, must_send, V, beta, kernel_safe)
+
+
+# ---------------------------------------------------------------------------
+# the full one-dispatch slot step (stages 1-5 of DESIGN.md §8, compact form)
+# ---------------------------------------------------------------------------
+
+class StepConsts(NamedTuple):
+    """Slot-invariant arrays consumed by :func:`compact_slot_step` — one
+    bundle so the engine's scan body and the Pallas kernel body (which
+    reconstructs it from refs) share the step verbatim."""
+
+    U: jax.Array  # (K, K)
+    mu: jax.Array  # (I,) raw capacity units
+    inv_service: jax.Array  # (I,)
+    sel_cmp: jax.Array  # (I, S)
+    stream_cmp: jax.Array  # (I, S)
+    valid_cmp: jax.Array  # (I, S)
+    succ_map: jax.Array  # (I, S) int32
+    term_f: jax.Array  # (I,)
+    comp_onehot: jax.Array  # (I, C)
+    inst_comp: jax.Array  # (I,) int32
+    inst_cont: jax.Array  # (I,) int32
+    gamma: jax.Array  # (I,)
+    comp_count: jax.Array  # (C,)
+    spout_f: jax.Array  # (I,) 1.0 on spout instances
+    adj_rows: jax.Array  # (I, C)
+    V: jax.Array  # ()
+    beta: jax.Array  # ()
+
+
+def _to_dense(c: StepConsts, x_cmp: jax.Array, kernel_safe: bool) -> jax.Array:
+    """(I, S) -> (I, C); the C sentinel slot contributes nowhere."""
+    I, S = x_cmp.shape
+    C = c.comp_onehot.shape[1]
+    if kernel_safe:
+        out = jnp.zeros((I, C), x_cmp.dtype)
+        for s in range(S):  # S is tiny and static
+            out = out + _onehot_cols(c.succ_map[:, s], C, x_cmp.dtype) * x_cmp[:, s:s + 1]
+        return out
+    rows = jnp.arange(I)[:, None]
+    return jnp.zeros((I, C + 1), x_cmp.dtype).at[rows, c.succ_map].add(x_cmp)[:, :C]
+
+
+def _to_dense3(c: StepConsts, x_cmp: jax.Array, kernel_safe: bool) -> jax.Array:
+    """(I, S, A) -> (I, C, A)."""
+    I, S, A = x_cmp.shape
+    C = c.comp_onehot.shape[1]
+    if kernel_safe:
+        out = jnp.zeros((I, C, A), x_cmp.dtype)
+        for s in range(S):
+            oh = _onehot_cols(c.succ_map[:, s], C, x_cmp.dtype)  # (I, C)
+            out = out + oh[:, :, None] * x_cmp[:, s, :][:, None, :]
+        return out
+    rows = jnp.arange(I)[:, None]
+    return jnp.zeros((I, C + 1, A), x_cmp.dtype).at[rows, c.succ_map, :].add(x_cmp)[:, :C]
+
+
+def _to_cmp(c: StepConsts, x: jax.Array, kernel_safe: bool) -> jax.Array:
+    """(I, C) -> (I, S)."""
+    I, C = x.shape
+    S = c.succ_map.shape[1]
+    if kernel_safe:
+        cols = []
+        for s in range(S):
+            oh = _onehot_cols(c.succ_map[:, s], C, x.dtype)
+            cols.append(jnp.sum(x * oh, axis=1))
+        return jnp.stack(cols, axis=1) * c.valid_cmp
+    gather_idx = jnp.minimum(c.succ_map, C - 1)
+    return jnp.take_along_axis(x, gather_idx, axis=1) * c.valid_cmp
+
+
+def _drain_ages(buckets: jax.Array, amount: jax.Array) -> jax.Array:
+    # local copy of cohort_fused.drain_ages (import would be circular)
+    cum = jnp.cumsum(buckets, axis=-1)
+    return jnp.clip(amount[..., None] - (cum - buckets), 0.0, buckets)
+
+
+def compact_slot_step(
+    c: StepConsts,
+    state,
+    xs,
+    *,
+    scheduler: str,
+    age_cap: int,
+    kernel_safe: bool = False,
+):
+    """One slot of the cohort dynamics (stages 1-5 of DESIGN.md §8) with the
+    compact one-dispatch decision — no (I, I) tensor anywhere. Mirrors
+    ``cohort_fused._fused_step`` stage for stage; the dense path remains in
+    that module for the ``potus-loop`` reference scheduler.
+
+    ``xs`` is ``(act_t, pred_t, new_pred, t)`` plus optionally one slot of a
+    disruption trace ``(mu_row, gamma_row, alive_row)``; the caps fold
+    (DESIGN.md §9) happens here in compact form — alive counts, effective
+    gamma, cancelled mandatory dispatch on dead rows — matching
+    ``potus.apply_caps`` numerically.
+    """
+    act_t, pred_t, new_pred, t, *ev = xs
+    q_rem, admit, q_in_tag, q_out_tag, transit, resp_mass, resp_time = state
+    I, S, W1 = q_rem.shape
+    C = c.comp_onehot.shape[1]
+    Atot = q_in_tag.shape[-1]
+    spout_f = c.spout_f
+    bolt_f = 1.0 - spout_f
+    dt = q_rem.dtype
+
+    # -- 1. reconcile window pos-0 with actual arrivals of slot t ------------
+    pred_m = _to_cmp(c, pred_t, kernel_safe) * c.stream_cmp
+    act_m = _to_cmp(c, act_t, kernel_safe) * c.stream_cmp
+    tp = jnp.minimum(pred_m, act_m)
+    tn = act_m - tp
+    r = jnp.where(pred_m > 0, q_rem[:, :, 0] / jnp.where(pred_m > 0, pred_m, 1.0), 0.0)
+    q_rem = jnp.concatenate([(r * tp + tn)[:, :, None], q_rem[:, :, 1:]], axis=-1)
+
+    # -- 2. observe queue state, schedule (compact decision) -----------------
+    q_in_arr = q_in_tag.sum(-1)
+    q_out_cmp = jnp.where(spout_f[:, None] > 0, q_rem.sum(-1), q_out_tag.sum(-1))
+    q_out_arr = _to_dense(c, q_out_cmp, kernel_safe)
+    must_send = _to_dense(c, (q_rem[:, :, 0] + admit) * spout_f[:, None], kernel_safe)
+    if ev:
+        mu_row, gamma_row, alive_row = ev[0]
+        mu_eff = mu_row * c.inv_service
+        if kernel_safe:
+            comp_count = jax.lax.dot_general(
+                alive_row[None, :], c.comp_onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=dt)[0]
+        else:
+            comp_count = jnp.zeros((C,), dt).at[c.inst_comp].add(alive_row)
+        cp = CompactProblem(c.inst_comp, c.inst_cont, gamma_row, comp_count,
+                            c.adj_rows, alive_row)
+        must_send = must_send * alive_row[:, None]
+    else:
+        mu_eff = c.mu * c.inv_service
+        cp = CompactProblem(c.inst_comp, c.inst_cont, c.gamma, c.comp_count,
+                            c.adj_rows, jnp.ones((I,), dt))
+    dec = compact_decide(scheduler, cp, c.U, q_in_arr, q_out_arr, must_send,
+                         c.V, c.beta, kernel_safe)
+    backlog = q_in_arr.sum() + c.beta * q_out_arr.sum()
+    cost = dec.cost
+
+    # -- 3. drain sources oldest-first, split over targets -------------------
+    shipped_cmp = _to_cmp(c, dec.shipped, kernel_safe)
+    src_spout = jnp.concatenate(
+        [jnp.zeros((I, S, age_cap), dt), q_rem, admit[:, :, None]], axis=-1
+    )
+    src_bolt = jnp.concatenate([q_out_tag, jnp.zeros((I, S, 1), dt)], axis=-1)
+    src_ext = jnp.where(spout_f[:, None, None] > 0, src_spout, src_bolt)  # (I, S, Atot+1)
+    drained = _drain_ages(src_ext, shipped_cmp)
+    q_rem = q_rem - drained[:, :, age_cap:Atot] * spout_f[:, None, None]
+    admit = admit - drained[:, :, -1] * spout_f[:, None]
+    q_out_tag = q_out_tag - drained[:, :, :Atot] * bolt_f[:, None, None]
+
+    # landing: the admission slot re-tags to age 0 (bucket age_cap) on landing
+    d_land = jnp.concatenate(
+        [drained[:, :, :age_cap],
+         drained[:, :, age_cap:age_cap + 1] + drained[:, :, -1:],
+         drained[:, :, age_cap + 1:Atot]], axis=-1,
+    )  # (I, S, Atot)
+    d_dense = _to_dense3(c, d_land, kernel_safe)  # (I, C, Atot)
+    sh_safe = jnp.where(dec.shipped > 0, dec.shipped, 1.0)
+    live = dec.shipped > _EPS
+    w_pt = jnp.where(live, dec.point / sh_safe, 0.0)
+    w_ev = jnp.where(live, dec.even_per / sh_safe, 0.0)
+    wd = (w_pt[:, :, None] * d_dense).reshape(I * C, Atot)
+    if kernel_safe:
+        oh_t = _onehot_cols(dec.j_point.reshape(I * C), I, dt)  # (I*C, I); I -> zero row
+        land = jax.lax.dot_general(oh_t, wd, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=dt)
+    else:
+        land = jnp.zeros((I + 1, Atot), dt).at[dec.j_point.reshape(I * C)].add(wd)[:I]
+    # even spread: per-component contraction, then broadcast to alive instances
+    ev_cb = jnp.einsum("ic,icb->cb", w_ev, d_dense)  # (C, Atot)
+    if kernel_safe:
+        ev_rows = jax.lax.dot_general(c.comp_onehot, ev_cb, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=dt)  # (I, Atot)
+    else:
+        ev_rows = ev_cb[c.inst_comp]
+    land = land + cp.alive[:, None] * ev_rows
+
+    # -- 4. land last slot's transit, serve bolts ----------------------------
+    avail = q_in_tag + transit
+    served_amt = jnp.minimum(avail.sum(-1), mu_eff) * bolt_f
+    served_b = _drain_ages(avail, served_amt)
+    q_in_tag = (avail - served_b) * bolt_f[:, None]
+    cmass = jax.lax.dot_general(
+        c.comp_onehot, served_b * c.term_f[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=dt,
+    )  # (C, Atot)
+    if kernel_safe:
+        ages = jax.lax.broadcasted_iota(dt, (1, Atot), 1)  # 2-D iota (Pallas TPU)
+        resp_row = jnp.maximum(age_cap - ages, 0.0)  # (1, Atot)
+        # accumulator columns [t, t + Atot) — always in range (len >= Tc + Atot)
+        t = jnp.asarray(t)
+        z = jnp.zeros((), t.dtype)
+        seg = jax.lax.dynamic_slice(resp_mass, (z, t), (C, Atot))
+        resp_mass = jax.lax.dynamic_update_slice(resp_mass, seg + cmass, (z, t))
+        seg_t = jax.lax.dynamic_slice(resp_time, (z, t), (C, Atot))
+        resp_time = jax.lax.dynamic_update_slice(
+            resp_time, seg_t + cmass * resp_row, (z, t))
+    else:
+        resp_per_b = jnp.maximum(age_cap - jnp.arange(Atot, dtype=dt), 0.0)
+        idx = t + jnp.arange(Atot)
+        resp_mass = resp_mass.at[:, idx].add(cmass, mode="drop")
+        resp_time = resp_time.at[:, idx].add(cmass * resp_per_b[None, :], mode="drop")
+    capped_served = cmass[:, 0].sum()
+    term_served = cmass.sum()
+    q_out_tag = q_out_tag + served_b[:, None, :] * c.sel_cmp[:, :, None] * bolt_f[:, None, None]
+
+    # -- 5. admit leftover actuals, shift windows and age axes ---------------
+    admit = admit + q_rem[:, :, 0] * spout_f[:, None]
+    q_rem = jnp.concatenate(
+        [q_rem[:, :, 1:], (_to_cmp(c, new_pred, kernel_safe) * c.stream_cmp)[:, :, None]],
+        axis=-1,
+    )
+
+    def shift(x):  # age b+1 -> b; the oldest bucket saturates (A-cap rule)
+        head = x[..., 0:1] + x[..., 1:2]
+        return jnp.concatenate([head, x[..., 2:], jnp.zeros_like(x[..., 0:1])], axis=-1)
+
+    state = (q_rem, admit, shift(q_in_tag), shift(q_out_tag), shift(land),
+             resp_mass, resp_time)
+    return state, (backlog, cost, capped_served, term_served)

@@ -211,6 +211,28 @@ def _greedy_row(
     return x_row, budget, used
 
 
+def _fill_components(
+    m: jax.Array,  # (C,) cheapest candidate price per component (+inf = none)
+    j_c: jax.Array,  # (C,) int32 — that candidate's instance index (I = none)
+    budget: jax.Array,  # (C,) per-component q_out budget (0 where no candidate)
+    gamma_i: jax.Array,  # ()
+):
+    """Water-fill ``gamma_i`` against per-component budgets in ascending
+    ``(price, index)`` order. Returns ``(fill_sorted, j_sorted, perm)`` where
+    ``perm`` maps sorted positions back to component slots, so callers can
+    scatter the fill either onto instance columns (dense X) or back into
+    component order (the compact one-dispatch path, ``core.compact``). Shared
+    by both so the two allocations are identical by construction."""
+    C = m.shape[0]
+    _, j_sorted, b_sorted, perm = jax.lax.sort(
+        (m, j_c, budget, jnp.arange(C, dtype=jnp.int32)), num_keys=2
+    )
+    prefix = jnp.cumsum(b_sorted)
+    before = jnp.concatenate([jnp.zeros((1,), prefix.dtype), prefix[:-1]])
+    fill = jnp.minimum(prefix, gamma_i) - jnp.minimum(before, gamma_i)
+    return fill, j_sorted, perm
+
+
 def _waterfill_row(
     l_row: jax.Array,  # (I,)
     qout_row: jax.Array,  # (C,) output-queue budget of source i
@@ -239,10 +261,7 @@ def _waterfill_row(
     j_c = jnp.full((C,), I, jnp.int32).at[inst_comp].min(idx)
     budget = jnp.where(m < 0.0, jnp.maximum(qout_row, 0.0), 0.0)
     # ascending (price, index); componentless entries carry zero budget
-    _, j_sorted, b_sorted = jax.lax.sort((m, j_c, budget), num_keys=2)
-    prefix = jnp.cumsum(b_sorted)
-    before = jnp.concatenate([jnp.zeros((1,), prefix.dtype), prefix[:-1]])
-    fill = jnp.minimum(prefix, gamma_i) - jnp.minimum(before, gamma_i)
+    fill, j_sorted, _ = _fill_components(m, j_c, budget, gamma_i)
     return jnp.zeros((I,), l_row.dtype).at[j_sorted].add(fill, mode="drop")
 
 

@@ -14,6 +14,7 @@ sweep runs as one compiled computation (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable
 
@@ -218,7 +219,7 @@ def materialize_arrivals(arrivals, topo: Topology, n_slots: int) -> np.ndarray:
     return np.asarray(arrivals)
 
 
-def run_sim(
+def _run_sim_impl(
     topo: Topology,
     net: NetworkCosts,
     inst_container: np.ndarray,
@@ -229,13 +230,15 @@ def run_sim(
     events: EventTrace | None = None,  # disruption trace (core.events, DESIGN.md §9)
     chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
 ) -> SimResult:
+    from .engine import UnsupportedEngineOption
+
     _check_mu_override(mu, events)
     arrivals = materialize_arrivals(arrivals, topo, T + cfg.window + 1)
     if cfg.sharded:
         if cfg.use_pallas:
-            raise ValueError("sharded engine has no Pallas path yet (use one or the other)")
+            raise UnsupportedEngineOption("sharded", "use_pallas")
         if chunk is not None:
-            raise ValueError("chunked scan is not supported on the sharded engine yet")
+            raise UnsupportedEngineOption("sharded", "chunk")
         return run_sim_sharded(topo, net, inst_container, arrivals, T, cfg, mu=mu,
                                events=events)
     if chunk is not None and chunk <= 0:
@@ -282,3 +285,17 @@ def run_sim(
         served_total=served,
         final_state=jax.device_get(state),
     )
+
+
+def run_sim(*args, **kwargs) -> SimResult:
+    """Deprecated alias of the scan-engine entry point — use
+    :func:`repro.core.simulate` with an :class:`~repro.core.engine.EngineSpec`
+    (``engine="jax"`` or ``engine="sharded"``). Thin shim, removed one
+    release after the unified facade landed (DESIGN.md §12)."""
+    warnings.warn(
+        "run_sim(...) is deprecated; use "
+        "repro.core.simulate(EngineSpec(engine='jax', ...))",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _run_sim_impl(*args, **kwargs)

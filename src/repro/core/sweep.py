@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .engine import OPTION_SUPPORT, UnsupportedEngineOption, check_engine_option
 from .events import EventTrace, FleetScenario
 from .network import NetworkCosts
 from .potus import caps_for_slot, make_problem
@@ -46,8 +47,8 @@ from .simulator import (
     _check_mu_override,
     _get_scheduler,
     materialize_arrivals,
+    _run_sim_impl,
     pad_arrivals,
-    run_sim,
     sim_step,
     stacked_host_traces,
 )
@@ -294,9 +295,9 @@ def run_sweep(
 
     if engine in ("cohort", "cohort-fused"):
         if mu is not None:
-            raise ValueError(f"engine={engine!r} has no mu override; it uses topo.inst_mu")
+            raise UnsupportedEngineOption(engine, "mu")
         if spec.sharded:
-            raise ValueError(f"engine={engine!r} has no sharded path (DESIGN.md §7)")
+            raise UnsupportedEngineOption(engine, "sharded", supported=("sharded",))
         opts = dict(engine_opts or {})
         if engine == "cohort-fused":
             from .cohort_fused import run_fused_sweep
@@ -305,48 +306,51 @@ def run_sweep(
                 topo, net, inst_container, arr_map, T, spec, events_map=ev_map, **opts
             )
             return SweepResult(spec, scenarios, results, n_batches=n_batches)
-        from .cohort import run_cohort_sim
+        from .cohort import _run_cohort_sim_impl
 
         if opts.get("service") is not None:
-            raise ValueError("the service axis is fused-engine only (engine='cohort-fused')")
+            check_engine_option("cohort", "service")
         if opts.get("chunk") is not None:
-            raise ValueError("engine_opts['chunk'] applies to the scan engines "
-                             "(jax / cohort-fused); the cohort event loop already streams")
+            check_engine_option("cohort", "chunk")
+        if opts.get("slots_per_launch", 1) != 1:
+            check_engine_option("cohort", "slots_per_launch")
         opts.pop("service", None)
         opts.pop("chunk", None)
         opts.pop("age_cap", None)  # the event loop tracks ages exactly
+        opts.pop("slots_per_launch", None)  # fused-engine launch knob
         results = []
         for scn in scenarios:
             actual, predicted = arr_map[scn.arrival]
             results.append(
-                run_cohort_sim(topo, net, inst_container, actual, predicted, T,
-                               scn.config(), events=ev_map[scn.events], **opts)
+                _run_cohort_sim_impl(topo, net, inst_container, actual, predicted,
+                                     T, scn.config(), events=ev_map[scn.events],
+                                     **opts)
             )
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
     if engine != "jax":
         raise ValueError(f"unknown engine {engine!r}")
-    extra = set(engine_opts or {}) - {"chunk"}
-    if extra:
-        raise ValueError(f"engine_opts {sorted(extra)} apply to the cohort engines only")
+    for opt in sorted(set(engine_opts or {}) - {"chunk"}):
+        if opt not in OPTION_SUPPORT:
+            raise ValueError(f"unknown engine_opts key {opt!r}")
+        check_engine_option("jax", opt)
     active_traces = [t for t in (ev_map[scn.events] for scn in scenarios) if t is not None]
     if active_traces:
         _check_mu_override(mu, active_traces[0])
     mispredicted = [a for a in spec.arrival if arr_map[a][1] is not None]
     if mispredicted:
-        raise ValueError(
-            f"arrival scenarios {mispredicted} carry distinct predicted arrivals, which "
-            "only the cohort engine models — pass engine='cohort' (the JAX engine "
-            "treats its single stream as the predicted/actual arrivals combined)"
-        )
+        # arrival scenarios carrying distinct 'predicted' streams only make
+        # sense on the cohort engines (the JAX engine treats its single
+        # stream as the predicted/actual arrivals combined)
+        check_engine_option("jax", "predicted")
     if spec.sharded:
         if chunk is not None:
-            raise ValueError("chunked scan is not supported on the sharded engine yet")
+            check_engine_option("sharded", "chunk")
         # shard_map partitions the instance axis across devices; scenarios are
         # not additionally vmapped (the sharded path targets single big-I
         # scenarios, not wide grids) — run the grid sequentially (DESIGN.md §7)
         results = [
-            run_sim(topo, net, inst_container, arr_map[scn.arrival][0], T,
-                    scn.config(), mu=mu, events=ev_map[scn.events])
+            _run_sim_impl(topo, net, inst_container, arr_map[scn.arrival][0], T,
+                          scn.config(), mu=mu, events=ev_map[scn.events])
             for scn in scenarios
         ]
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))

@@ -16,11 +16,12 @@ from .decode_attention import decode_attention_call
 from .flash_attention import flash_attention_call
 from .potus_price import potus_price_call
 from .potus_schedule import potus_schedule_call
+from .potus_slot import potus_slot_call
 from .ssd_scan import ssd_intra_chunk_call
 
 __all__ = [
     "flash_attention", "decode_attention", "ssd_intra_chunk", "potus_price",
-    "potus_schedule_alloc", "cohort_drain_split",
+    "potus_schedule_alloc", "cohort_drain_split", "potus_slot_step",
 ]
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
@@ -57,6 +58,19 @@ def potus_schedule_alloc(U, q_in, q_out, inst_container, inst_comp, edge_mask, g
     return potus_schedule_call(
         U, q_in, q_out, inst_container, inst_comp, edge_mask, gamma, V, beta,
         interpret=_INTERPRET,
+    )
+
+
+def potus_slot_step(consts, state, act, pred, nxt, t0, *, scheduler="potus",
+                    age_cap=64, n_slots=1):
+    """Fused one-dispatch slot step (DESIGN.md §12): schedule + drain + split
+    + serve + queue/age-mass update for ``n_slots`` consecutive slots in one
+    Pallas launch. ``n_slots > 1`` is the megakernel (double-buffered queue
+    state, see ``kernels/potus_slot.py``). Returns ``(state, metrics)`` with
+    per-slot ``metrics = (backlog, cost, capped, served)``."""
+    return potus_slot_call(
+        consts, state, act, pred, nxt, t0, scheduler=scheduler,
+        age_cap=age_cap, n_slots=n_slots, interpret=_INTERPRET,
     )
 
 

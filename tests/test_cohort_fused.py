@@ -328,6 +328,9 @@ class TestFusedSweep:
 
 class TestPallasDrain:
     def test_use_pallas_invokes_kernel_and_matches(self, dyadic_system):
+        """``potus-loop`` keeps the dense reference path, whose ``use_pallas``
+        hot op is the drain+split kernel (compact schedulers route to the
+        fused slot kernel instead, DESIGN.md §12)."""
         import repro.kernels.ops as kops
         from repro.core.cohort_fused import _scan_cohort_fused
 
@@ -344,12 +347,13 @@ class TestPallasDrain:
         kops.cohort_drain_split = spy
         try:
             _scan_cohort_fused.clear_cache()
-            cfg = SimConfig(V=2.0, window=1)
+            cfg = SimConfig(V=2.0, window=1, scheduler="potus-loop")
             plain = run_cohort_fused(topo, net, placement, arr, None, Tp, cfg,
                                      age_cap=16)
             assert calls["n"] == 0
             via = run_cohort_fused(topo, net, placement, arr, None, Tp,
-                                   SimConfig(V=2.0, window=1, use_pallas=True),
+                                   SimConfig(V=2.0, window=1, scheduler="potus-loop",
+                                             use_pallas=True),
                                    age_cap=16)
             assert calls["n"] > 0, "use_pallas=True never reached the drain kernel"
             np.testing.assert_allclose(via.backlog, plain.backlog, rtol=1e-5, atol=1e-3)
@@ -357,6 +361,40 @@ class TestPallasDrain:
                                        atol=1e-3)
         finally:
             kops.cohort_drain_split = orig
+
+    def test_use_pallas_potus_routes_to_slot_kernel(self, dyadic_system):
+        """``potus`` + ``use_pallas`` runs the fused one-dispatch slot kernel
+        — one launch per slot block — and matches the XLA path bitwise on the
+        dyadic tier (POTUS' proportional split is the one non-dyadic value)."""
+        import repro.kernels.ops as kops
+        from repro.core.cohort_fused import _scan_cohort_fused
+
+        topo, net, placement = dyadic_system
+        Tp = 40
+        arr = _pow2_arrivals(topo, Tp + 8, seed=5)
+        calls = {"n": 0}
+        orig = kops.potus_slot_step
+
+        def spy(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        kops.potus_slot_step = spy
+        try:
+            _scan_cohort_fused.clear_cache()
+            cfg = SimConfig(V=2.0, window=1)
+            plain = run_cohort_fused(topo, net, placement, arr, None, Tp, cfg,
+                                     age_cap=16)
+            assert calls["n"] == 0
+            via = run_cohort_fused(topo, net, placement, arr, None, Tp,
+                                   SimConfig(V=2.0, window=1, use_pallas=True),
+                                   age_cap=16)
+            assert calls["n"] > 0, "use_pallas=True never reached the slot kernel"
+            np.testing.assert_allclose(via.backlog, plain.backlog, rtol=0, atol=1e-4)
+            np.testing.assert_allclose(via.comm_cost, plain.comm_cost, rtol=1e-6,
+                                       atol=1e-4)
+        finally:
+            kops.potus_slot_step = orig
 
     def test_kernel_matches_xla_reference(self):
         """Direct kernel parity on random (non-contiguous-component) inputs."""
@@ -381,6 +419,51 @@ class TestPallasDrain:
             jnp.asarray(src), jnp.asarray(ship), jnp.asarray(ratio),
             jnp.asarray(comp), A))
         np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# megakernel differential: dyadic bitwise tier across use_pallas
+# ---------------------------------------------------------------------------
+
+class TestMegakernelDifferential:
+    """The dyadic bitwise tier extended across ``use_pallas`` with the
+    multi-slot megakernel enabled: the Python event-loop oracle, the compact
+    XLA scan, and K-slots-per-launch Pallas kernel must agree on trajectories
+    (POTUS within the documented 1-ulp split tolerance). Nightly runs this
+    class by name (``-k megakernel``)."""
+
+    @pytest.mark.parametrize("slots_per_launch", [1, 4, 7])
+    def test_megakernel_bitwise_dyadic(self, dyadic_system, slots_per_launch):
+        topo, net, placement = dyadic_system
+        Tm = 120
+        arr = _pow2_arrivals(topo, Tm + 16, seed=3)
+        cfg = SimConfig(V=2.0, beta=0.5, window=2, scheduler="potus")
+        py = run_cohort_sim(topo, net, placement, arr, None, Tm, cfg)
+        mk = run_cohort_fused(
+            topo, net, placement, arr, None, Tm,
+            SimConfig(V=2.0, beta=0.5, window=2, scheduler="potus",
+                      use_pallas=True),
+            slots_per_launch=slots_per_launch,
+        )
+        np.testing.assert_allclose(mk.backlog, py.backlog, rtol=0, atol=1e-4)
+        np.testing.assert_allclose(mk.comm_cost, py.comm_cost, rtol=0, atol=1e-4)
+        assert mk.avg_response == pytest.approx(py.avg_response, rel=0.02, abs=0.05)
+
+    @pytest.mark.parametrize("scheduler", ["shuffle", "jsq"])
+    def test_compact_path_exact_across_use_pallas(self, dyadic_system, scheduler):
+        """Shuffle/JSQ have no Pallas slot kernel — ``use_pallas`` is a no-op
+        on their compact path, so the two flags must match bit for bit."""
+        topo, net, placement = dyadic_system
+        Tm = 120
+        arr = _pow2_arrivals(topo, Tm + 16, seed=3)
+        runs = [
+            run_cohort_fused(topo, net, placement, arr, None, Tm,
+                             SimConfig(V=2.0, beta=0.5, window=2,
+                                       scheduler=scheduler, use_pallas=up))
+            for up in (False, True)
+        ]
+        np.testing.assert_array_equal(runs[0].backlog, runs[1].backlog)
+        np.testing.assert_array_equal(runs[0].comm_cost, runs[1].comm_cost)
 
 
 # ---------------------------------------------------------------------------
