@@ -8,8 +8,7 @@ per-tuple response times and run on the fused cohort engine
 (``engine="cohort-fused"``, DESIGN.md §8) — each (scheduler, window)
 partition of the grid compiles once and vmaps over its scenarios instead of
 looping the Python event loop. ``fig5`` also emits a ``fig5/sweep_speedup``
-row comparing the batched sweep against the old per-scenario ``run_sim``
-loop; the cohort-fused-vs-Python trajectory lives in
+row comparing the batched sweep against a per-scenario ``simulate`` loop; the cohort-fused-vs-Python trajectory lives in
 ``systems_bench.cohort_scale``.
 """
 from __future__ import annotations
@@ -18,10 +17,20 @@ import time
 
 import numpy as np
 
-from repro.core import SimConfig, SweepSpec, run_sim, run_sweep
+from repro.core import EngineSpec, SimConfig, SweepSpec, run_sweep, simulate
 from repro.core.prediction import misprediction_scenarios, mse, predictor_scenarios
 
 from .common import QUICK, T_COHORT, T_SIM, Row, arrivals_for, paper_system, timer
+
+
+def _run_jax(topo, net, placement, arrivals, T, cfg):
+    """The scan engine via the unified facade (the old ``run_sim`` shape)."""
+    return simulate(EngineSpec(
+        topo=topo, net=net, placement=placement, arrivals=arrivals, T=T,
+        engine="jax", scheduler=cfg.scheduler, V=cfg.V, beta=cfg.beta,
+        window=cfg.window, use_pallas=cfg.use_pallas,
+    ))
+
 
 # age-cap of the fused engine's response tracking (DESIGN.md §8): responses
 # beyond the cap saturate, so high-V grids (Fig. 6ab, responses ~ O(V))
@@ -59,7 +68,7 @@ def fig5_backlog_and_cost_vs_v() -> list[Row]:
     """Fig. 5(a,b): backlog vs V; Fig. 5(c,d): comm cost vs V.
 
     One batched sweep per topology covers the whole (V x W) grid; a speedup
-    row compares it against N sequential ``run_sim`` calls on the same grid.
+    row compares it against N sequential ``simulate`` calls on the same grid.
     """
     rows = []
     Vs = [1, 2, 5, 10, 16, 25, 50] if QUICK else [1, 2, 5, 10, 16, 25, 40, 50, 70, 100]
@@ -71,7 +80,7 @@ def fig5_backlog_and_cost_vs_v() -> list[Row]:
         spec = SweepSpec(V=tuple(float(v) for v in Vs), window=(0, 5))
         with timer() as t:
             sw = run_sweep(sys.topo, sys.net, sys.placement, arr, T_SIM, spec)
-            sh = run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM,
+            sh = _run_jax(sys.topo, sys.net, sys.placement, arr, T_SIM,
                          SimConfig(V=1.0, window=0, scheduler="shuffle"))
         us = t.dt / (len(sw) * T_SIM) * 1e6
         for W in (0, 5):
@@ -103,13 +112,13 @@ def _sweep_speedup_row(sys, arr: np.ndarray, spec: SweepSpec) -> Row:
     # warm both paths (compile outside the timed region, as for a live system)
     run_sweep(sys.topo, sys.net, sys.placement, arr, T_SIM, spec)
     for scn in scenarios:
-        run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM, scn.config())
+        _run_jax(sys.topo, sys.net, sys.placement, arr, T_SIM, scn.config())
     t_batch = min(
         _timed(lambda: run_sweep(sys.topo, sys.net, sys.placement, arr, T_SIM, spec))
         for _ in range(2)
     )
     t_seq = min(
-        _timed(lambda: [run_sim(sys.topo, sys.net, sys.placement, arr, T_SIM, scn.config())
+        _timed(lambda: [_run_jax(sys.topo, sys.net, sys.placement, arr, T_SIM, scn.config())
                         for scn in scenarios])
         for _ in range(2)
     )

@@ -27,6 +27,7 @@ def main() -> None:
         ("disruption", disruption.disruption_bench),
         ("figD", disruption.figd_disruption),
         ("cohort_scale", systems_bench.cohort_scale),
+        ("cohort_sharded", systems_bench.cohort_sharded_scale),
         ("scheduler_scale", systems_bench.scheduler_fastpath),
         ("scheduler_sweep", systems_bench.scheduler_scale),
         ("kernels", systems_bench.kernels_micro),

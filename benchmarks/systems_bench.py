@@ -1,8 +1,14 @@
 """Framework-level microbenchmarks: scheduler scaling (§4.2 complexity),
-cohort-engine scaling (fused vs Python event loop), kernels, MoE routers,
+cohort-engine scaling (fused vs Python event loop), strong/weak scaling of
+the instance-sharded cohort engine (DESIGN.md §13), kernels, MoE routers,
 and the POTUS serving dispatcher."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -253,6 +259,144 @@ def _cohort_grid_row() -> list[Row]:
     return [Row("cohort_scale/grid", t_fused / (n * T) * 1e6,
                 f"scenarios={n};batches=1;fused_s={t_fused:.3f};"
                 f"python_s={t_py:.3f};speedup={t_py / t_fused:.1f}x")]
+
+
+def _sharded_probe(I_target: int, T: int, age_cap: int, n_devices: int,
+                   sharded: bool, reps: int = 2) -> dict:
+    """One cohort-fused measurement in a fresh subprocess.
+
+    jax locks the device count at first init, so every shard count needs
+    its own process with ``--xla_force_host_platform_device_count`` (same
+    pattern as tests/test_distributed.py). The child prints a JSON row as
+    its last stdout line: warm wall seconds (min over ``reps`` post-compile
+    runs) plus the per-slot cross-device payload from
+    ``cohort_slot_payload_floats``.
+    """
+    code = textwrap.dedent(f"""
+        import json, time
+        import numpy as np
+        import jax
+        from benchmarks.systems_bench import _cohort_fleet
+        from repro.core import (EngineSpec, container_costs, fat_tree,
+                                feasible_rates, poisson_arrivals, simulate)
+        from repro.core.sharded import cohort_slot_payload_floats, instance_mesh
+
+        topo = _cohort_fleet({I_target})
+        I = topo.n_instances
+        server_dist, _ = fat_tree(4)
+        net = container_costs(f"cohort-fleet-{{I}}", server_dist,
+                              containers_per_server=8)
+        rng = np.random.default_rng(0)
+        placement = rng.integers(0, net.n_containers, I).astype(np.int32)
+        rates = feasible_rates(topo, utilization=0.85)
+        arr = poisson_arrivals(rng, rates, {T} + 8)
+        spec = EngineSpec(topo=topo, net=net, placement=placement,
+                          arrivals=arr, T={T}, engine="cohort-fused",
+                          scheduler="potus", V=2.0, window=0,
+                          age_cap={age_cap}, sharded={sharded})
+        t0 = time.perf_counter()
+        res = simulate(spec)  # trace + compile + first run
+        compile_s = time.perf_counter() - t0
+        times = []
+        for _ in range({reps}):
+            t0 = time.perf_counter()
+            res = simulate(spec)
+            times.append(time.perf_counter() - t0)
+        n_shards = instance_mesh(I).shape["i"] if {sharded} else 1
+        atot = {age_cap} + 0 + 1  # age_cap + window + 1
+        print(json.dumps(dict(
+            I=int(I), devices=jax.device_count(), n_shards=int(n_shards),
+            wall_s=min(times), compile_s=compile_s,
+            payload_floats=int(cohort_slot_payload_floats(
+                I, topo.n_components, net.n_containers, atot, n_shards)),
+            C=int(topo.n_components), K=int(net.n_containers),
+            avg_backlog=float(np.mean(np.asarray(res.backlog))))))
+    """)
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, cwd=root, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded probe failed (I={I_target}, devices={n_devices}, "
+            f"sharded={sharded}):\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def cohort_sharded_scale() -> list[Row]:
+    """Strong/weak scaling of the instance-sharded one-dispatch engine
+    (DESIGN.md §13) over forced host CPU devices.
+
+    Strong tier: fixed fleet (I=16384), 1 -> 4 shards, plus a dense
+    (non-``shard_map``) baseline in an identical 1-device subprocess;
+    ci.yml's bench smoke asserts the best sharded wall time stays within
+    10% of dense — at one shard every collective is the identity, so
+    sharding must cost ~nothing. Weak tier: fixed instances *per shard*,
+    the fleet growing with the mesh up to I=131072 at 4 shards.
+
+    Every row reports the per-slot cross-device payload (floats) from
+    ``cohort_slot_payload_floats`` — the O(I·C)-bounded collective traffic
+    argued in §13.2 (atot and K are horizon/network constants, so the
+    I·atot landing term dominates and payload/IC stays bounded). Forced
+    host devices share this machine's cores, so strong-scaling wall times
+    measure shard_map + collective overhead rather than real speedup; the
+    honest claims here are the payload bound and the zero-overhead
+    single-shard row, with real distribution covered by the 4-device
+    differential in tests/test_distributed.py.
+    """
+    rows: list[Row] = []
+    age_cap = 4
+
+    # --- strong scaling: fixed fleet, growing mesh ---------------------------
+    T_s = 4 if SMOKE else 16
+    I_strong = 16384
+    strong_shards = (1, 4) if SMOKE else (1, 2, 4)
+    dense = _sharded_probe(I_strong, T_s, age_cap, 1, sharded=False)
+    rows.append(Row(f"cohort_sharded/strong/dense/I{dense['I']}",
+                    dense["wall_s"] / T_s * 1e6,
+                    f"instances={dense['I']};T={T_s};"
+                    f"wall_s={dense['wall_s']:.3f}"))
+    COHORT_BENCH.append(bench_row(
+        "cohort_sharded_strong", "dense", "potus", dense["I"], T_s,
+        dense["wall_s"], n_shards=1, devices=1, payload_floats=0,
+        IC=dense["I"] * dense["C"]))
+    for n in strong_shards:
+        p = _sharded_probe(I_strong, T_s, age_cap, n, sharded=True)
+        speedup = dense["wall_s"] / p["wall_s"]
+        rows.append(Row(
+            f"cohort_sharded/strong/shards{p['n_shards']}/I{p['I']}",
+            p["wall_s"] / T_s * 1e6,
+            f"instances={p['I']};T={T_s};wall_s={p['wall_s']:.3f};"
+            f"vs_dense={speedup:.2f}x;payload_floats={p['payload_floats']}"))
+        COHORT_BENCH.append(bench_row(
+            "cohort_sharded_strong", "sharded", "potus", p["I"], T_s,
+            p["wall_s"], speedup=speedup, n_shards=p["n_shards"],
+            devices=p["devices"], payload_floats=p["payload_floats"],
+            IC=p["I"] * p["C"]))
+
+    # --- weak scaling: fixed instances per shard -----------------------------
+    T_w = 2 if SMOKE else 6
+    per_shard = 2048 if SMOKE else 32768
+    weak_shards = (1, 4) if SMOKE else (1, 2, 4)
+    base_wall = None
+    for n in weak_shards:
+        p = _sharded_probe(per_shard * n, T_w, age_cap, n, sharded=True)
+        if base_wall is None:
+            base_wall = p["wall_s"]
+        eff = base_wall / p["wall_s"]
+        rows.append(Row(
+            f"cohort_sharded/weak/shards{p['n_shards']}/I{p['I']}",
+            p["wall_s"] / T_w * 1e6,
+            f"instances={p['I']};per_shard={per_shard};T={T_w};"
+            f"wall_s={p['wall_s']:.3f};weak_eff={eff:.2f};"
+            f"payload_floats={p['payload_floats']}"))
+        COHORT_BENCH.append(bench_row(
+            "cohort_sharded_weak", "sharded", "potus", p["I"], T_w,
+            p["wall_s"], speedup=eff, n_shards=p["n_shards"],
+            devices=p["devices"], per_shard_I=per_shard,
+            payload_floats=p["payload_floats"], IC=p["I"] * p["C"]))
+    return rows
 
 
 def scheduler_scale() -> list[Row]:

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import (
     ArrivalSpec,
+    EngineSpec,
     SimConfig,
     build_topology,
     container_costs,
@@ -31,7 +32,7 @@ from repro.core import (
     fat_tree,
     linear_app,
     run_event_sim,
-    run_sim,
+    simulate,
     spout_rate_matrix,
     t_heron_placement,
 )
@@ -44,6 +45,16 @@ WORKLOAD_BENCH: list[dict] = []
 #: deep-horizon slot count for the streaming row — 10⁵ at full scale
 T_LONG = 2_000 if SMOKE else (20_000 if QUICK else 100_000)
 CHUNK = 512 if SMOKE else 4096
+
+
+def _run_jax(topo, net, placement, arrivals, T, cfg, chunk=None):
+    """The scan engine via the unified facade (the old ``run_sim`` shape)."""
+    kw = {} if chunk is None else {"chunk": chunk}
+    return simulate(EngineSpec(
+        topo=topo, net=net, placement=placement, arrivals=arrivals, T=T,
+        engine="jax", scheduler=cfg.scheduler, V=cfg.V, beta=cfg.beta,
+        window=cfg.window, use_pallas=cfg.use_pallas, **kw,
+    ))
 
 
 def _compact_system():
@@ -89,11 +100,11 @@ def workload_bench() -> list[Row]:
     cfg = SimConfig(window=2, scheduler="potus")
     # bitwise transparency at a cross-checkable horizon first
     T_ref = min(T_LONG, 2_000)
-    mono = run_sim(topo, net, placement, spec, T_ref, cfg)
-    chk = run_sim(topo, net, placement, spec, T_ref, cfg, chunk=CHUNK)
+    mono = _run_jax(topo, net, placement, spec, T_ref, cfg)
+    chk = _run_jax(topo, net, placement, spec, T_ref, cfg, chunk=CHUNK)
     exact = bool(np.array_equal(np.asarray(mono.backlog), np.asarray(chk.backlog)))
     with timer() as t_long:
-        long = run_sim(topo, net, placement, spec, T_LONG, cfg, chunk=CHUNK)
+        long = _run_jax(topo, net, placement, spec, T_LONG, cfg, chunk=CHUNK)
     rows.append(Row(
         f"workload/stream/T{T_LONG}", t_long.dt / T_LONG * 1e6,
         f"chunk={CHUNK};bitwise_vs_monolithic={exact};"
@@ -112,7 +123,7 @@ def workload_bench() -> list[Row]:
                          ("pareto", {"alpha": 1.3})):
         spec = ArrivalSpec(kind=kind, seed=5, rate_per_stream=2.0, params=params)
         arr = np.round(spec.generate(topo, T_ev + cfg_ev.window + 1))
-        ref = run_sim(topo, net, placement, arr, T_ev, cfg_ev)
+        ref = _run_jax(topo, net, placement, arr, T_ev, cfg_ev)
         with timer() as t_ev:
             ev = run_event_sim(topo, net, placement, arr, T_ev, cfg_ev,
                                integral=True, jitter=0.5, seed=7)

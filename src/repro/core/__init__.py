@@ -7,8 +7,8 @@ engine).
 """
 from . import prediction
 from .baselines import jsq_schedule, shuffle_schedule
-from .cohort import CohortResult, run_cohort_sim
-from .cohort_fused import AgeCapSaturationWarning, run_cohort_fused
+from .cohort import CohortResult
+from .cohort_fused import AgeCapSaturationWarning
 from .engine import ENGINES, OPTION_SUPPORT, EngineSpec, UnsupportedEngineOption, simulate
 from .eventsim import EventSimResult, run_event_sim
 from .events import (
@@ -26,8 +26,15 @@ from .network import NetworkCosts, container_costs, fat_tree, jellyfish
 from .placement import instance_traffic, t_heron_placement
 from .potus import SchedProblem, SlotCaps, apply_caps, make_problem, potus_prices, potus_schedule
 from .queues import SimState, effective_qout, init_state, init_state_batch, slot_update
-from .sharded import instance_mesh, run_sim_sharded, sharded_schedule
-from .simulator import SimConfig, SimResult, run_sim, sim_step
+from .sharded import (
+    cohort_slot_payload_floats,
+    fleet_mesh,
+    instance_mesh,
+    run_sim_sharded,
+    sharded_schedule,
+    sharded_schedule_batch,
+)
+from .simulator import SimConfig, SimResult, sim_step
 from .sweep import Scenario, SweepResult, SweepSpec, run_sweep
 from .topology import Component, Topology, build_topology, diamond_app, linear_app, random_apps
 from .workload import (
@@ -50,10 +57,11 @@ __all__ = [
     "SchedProblem", "SlotCaps", "apply_caps", "make_problem", "potus_prices", "potus_schedule",
     "shuffle_schedule", "jsq_schedule",
     "SimState", "init_state", "init_state_batch", "effective_qout", "slot_update",
-    "SimConfig", "SimResult", "run_sim", "sim_step",
+    "SimConfig", "SimResult", "sim_step",
     "EngineSpec", "UnsupportedEngineOption", "simulate", "ENGINES", "OPTION_SUPPORT",
-    "instance_mesh", "run_sim_sharded", "sharded_schedule",
-    "CohortResult", "run_cohort_sim", "run_cohort_fused", "AgeCapSaturationWarning",
+    "instance_mesh", "fleet_mesh", "run_sim_sharded", "sharded_schedule",
+    "sharded_schedule_batch", "cohort_slot_payload_floats",
+    "CohortResult", "AgeCapSaturationWarning",
     "EventSimResult", "run_event_sim",
     "Scenario", "SweepSpec", "SweepResult", "run_sweep",
     "poisson_arrivals", "trace_synthetic", "feasible_rates", "spout_rate_matrix",

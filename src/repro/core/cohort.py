@@ -50,7 +50,7 @@ from .potus import make_problem
 from .simulator import SimConfig, _get_scheduler
 from .topology import Topology
 
-__all__ = ["CohortResult", "run_cohort_sim"]
+__all__ = ["CohortResult"]
 
 
 @dataclasses.dataclass
@@ -338,19 +338,3 @@ def _run_cohort_sim_impl(
         completed_frac=(n_done / max(len(measured), 1)),
         completed_mass=completed_mass,
     )
-
-
-def run_cohort_sim(*args, **kwargs) -> CohortResult:
-    """Deprecated alias of the Python cohort-engine entry point — use
-    :func:`repro.core.simulate` with an :class:`~repro.core.engine.EngineSpec`
-    (``engine="cohort"``). Thin shim, removed one release after the unified
-    facade landed (DESIGN.md §12)."""
-    import warnings
-
-    warnings.warn(
-        "run_cohort_sim(...) is deprecated; use "
-        "repro.core.simulate(EngineSpec(engine='cohort', ...))",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return _run_cohort_sim_impl(*args, **kwargs)

@@ -61,10 +61,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from typing import NamedTuple
+
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import shard_map_compat
+from repro.distributed.sharding import named
+
 from .cohort import CohortResult
 from .compact import COMPACT_SCHEDULERS, StepConsts, compact_slot_step
 from .network import NetworkCosts
 from .potus import caps_for_slot, make_problem
+from .sharded import COHORT_AXIS, cohort_state_specs, instance_mesh
 from .simulator import (
     SimConfig,
     _get_scheduler,
@@ -75,7 +83,7 @@ from .simulator import (
 )
 from .topology import Topology
 
-__all__ = ["run_cohort_fused", "run_fused_sweep", "drain_ages", "AgeCapSaturationWarning"]
+__all__ = ["run_fused_sweep", "drain_ages", "AgeCapSaturationWarning"]
 
 _EPS = 1e-12  # same negligible-mass threshold as the Python engine's FIFOs
 
@@ -114,6 +122,31 @@ def drain_ages(buckets: jax.Array, amount: jax.Array) -> jax.Array:
     """
     cum = jnp.cumsum(buckets, axis=-1)
     return jnp.clip(amount[..., None] - (cum - buckets), 0.0, buckets)
+
+
+class _CompactProb(NamedTuple):
+    """The O(I) slice of :class:`~repro.core.potus.SchedProblem` the compact
+    one-dispatch path consumes — everything but the (I, I) ``edge_mask``, so
+    fleet-scale (and instance-sharded, DESIGN.md §13) runs never materialize
+    O(I²) anywhere. Field dtypes mirror :func:`~repro.core.potus.make_problem`
+    exactly; only ``potus-loop`` (the dense reference scheduler) still needs
+    the full problem."""
+
+    inst_comp: jax.Array  # (I,) int32
+    inst_container: jax.Array  # (I,) int32
+    gamma: jax.Array  # (I,)
+    comp_count: jax.Array  # (C,) f32
+    is_spout: jax.Array  # (C,)[inst_comp] bool
+
+
+def _compact_prob(topo: Topology, inst_container) -> _CompactProb:
+    return _CompactProb(
+        inst_comp=jnp.asarray(topo.inst_comp),
+        inst_container=jnp.asarray(inst_container, dtype=jnp.int32),
+        gamma=jnp.asarray(topo.inst_gamma),
+        comp_count=jnp.asarray(topo.comp_parallelism, dtype=jnp.float32),
+        is_spout=jnp.asarray(topo.comp_is_spout[topo.inst_comp]),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +358,62 @@ def _fused_step(
     return state, (backlog, cost, capped_served, term_served)
 
 
+def _kernel_launches(consts, state, actual, pred, nxt, scheduler, age_cap,
+                     slots_per_launch):
+    """Drive one scenario's chunk through the Pallas slot kernel: a
+    ``lax.scan`` of K-slot megakernel launches plus one ragged-tail launch
+    (DESIGN.md §12). Shared by the dense scan and the single-shard sharded
+    scan — the kernel body contains no collectives, so under ``shard_map``
+    it only runs when the mesh has one shard (DESIGN.md §13)."""
+    from repro.kernels import ops as kops
+
+    T = actual.shape[0]
+    K = max(1, slots_per_launch)
+    nb, tail = T // K, T % K
+
+    def launch(state, xs_b, n_slots):
+        act_b, pred_b, nxt_b, t0 = xs_b
+        return kops.potus_slot_step(
+            consts, state, act_b, pred_b, nxt_b, t0,
+            scheduler=scheduler, age_cap=age_cap, n_slots=n_slots,
+        )
+
+    mets = []
+    if nb:
+        blk = (actual[: nb * K].reshape(nb, K, *actual.shape[1:]),
+               pred[: nb * K].reshape(nb, K, *pred.shape[1:]),
+               nxt[: nb * K].reshape(nb, K, *nxt.shape[1:]),
+               jnp.arange(nb, dtype=jnp.int32) * K)
+        state, m = jax.lax.scan(partial(launch, n_slots=K), state, blk)
+        mets.append(jax.tree.map(lambda y: y.reshape(nb * K), m))
+    if tail:
+        state, m = launch(
+            state,
+            (actual[nb * K:], pred[nb * K:], nxt[nb * K:], jnp.int32(nb * K)),
+            n_slots=tail,
+        )
+        mets.append(m)
+    backlog, cost, capped, served = (
+        jax.tree.map(lambda *ys: jnp.concatenate(ys), *mets)
+        if len(mets) > 1 else mets[0]
+    )
+    return state, (backlog, cost, capped.sum(), served.sum())
+
+
+def _step_consts(prob, comp_onehot, U, mu, inv_service, sel_cmp, stream_cmp,
+                 valid_cmp, succ_map, term_f, adj_rows, V, beta) -> StepConsts:
+    return StepConsts(
+        U=U, mu=mu, inv_service=inv_service, sel_cmp=sel_cmp,
+        stream_cmp=stream_cmp, valid_cmp=valid_cmp, succ_map=succ_map,
+        term_f=term_f, comp_onehot=comp_onehot,
+        inst_comp=prob.inst_comp, inst_cont=prob.inst_container,
+        gamma=prob.gamma,
+        comp_count=prob.comp_count.astype(mu.dtype),
+        spout_f=prob.is_spout.astype(mu.dtype),
+        adj_rows=adj_rows, V=V, beta=beta,
+    )
+
+
 @partial(jax.jit, static_argnames=("edges", "scheduler", "use_pallas", "age_cap",
                                    "n_components", "shared_inputs", "events_shared",
                                    "slots_per_launch"),
@@ -385,50 +474,12 @@ def _scan_cohort_fused(
     def one(state, actual, pred, nxt, V, beta, ev):
         T = actual.shape[0]
         if compact:
-            consts = StepConsts(
-                U=U, mu=mu, inv_service=inv_service, sel_cmp=sel_cmp,
-                stream_cmp=stream_cmp, valid_cmp=valid_cmp, succ_map=succ_map,
-                term_f=term_f, comp_onehot=comp_onehot,
-                inst_comp=prob.inst_comp, inst_cont=prob.inst_container,
-                gamma=prob.gamma,
-                comp_count=prob.comp_count.astype(mu.dtype),
-                spout_f=prob.is_spout.astype(mu.dtype),
-                adj_rows=adj_rows, V=V, beta=beta,
-            )
+            consts = _step_consts(prob, comp_onehot, U, mu, inv_service, sel_cmp,
+                                  stream_cmp, valid_cmp, succ_map, term_f,
+                                  adj_rows, V, beta)
         if kernel_path and ev is None:
-            from repro.kernels import ops as kops
-
-            K = max(1, slots_per_launch)
-            nb, tail = T // K, T % K
-
-            def launch(state, xs_b, n_slots):
-                act_b, pred_b, nxt_b, t0 = xs_b
-                return kops.potus_slot_step(
-                    consts, state, act_b, pred_b, nxt_b, t0,
-                    scheduler=scheduler, age_cap=age_cap, n_slots=n_slots,
-                )
-
-            mets = []
-            if nb:
-                blk = (actual[: nb * K].reshape(nb, K, *actual.shape[1:]),
-                       pred[: nb * K].reshape(nb, K, *pred.shape[1:]),
-                       nxt[: nb * K].reshape(nb, K, *nxt.shape[1:]),
-                       jnp.arange(nb, dtype=jnp.int32) * K)
-                state, m = jax.lax.scan(partial(launch, n_slots=K), state, blk)
-                mets.append(jax.tree.map(lambda y: y.reshape(nb * K), m))
-            if tail:
-                state, m = launch(
-                    state,
-                    (actual[nb * K:], pred[nb * K:], nxt[nb * K:],
-                     jnp.int32(nb * K)),
-                    n_slots=tail,
-                )
-                mets.append(m)
-            backlog, cost, capped, served = (
-                jax.tree.map(lambda *ys: jnp.concatenate(ys), *mets)
-                if len(mets) > 1 else mets[0]
-            )
-            return state, (backlog, cost, capped.sum(), served.sum())
+            return _kernel_launches(consts, state, actual, pred, nxt,
+                                    scheduler, age_cap, slots_per_launch)
         if compact:
             def step(st, x):
                 return compact_slot_step(consts, st, x, scheduler=scheduler,
@@ -450,6 +501,126 @@ def _scan_cohort_fused(
     return jax.vmap(one, in_axes=in_axes)(
         states, actual_s, pred_s, nxt_s, Vs, betas, events_s
     )
+
+
+@partial(jax.jit, static_argnames=("mesh", "scheduler", "use_pallas", "age_cap",
+                                   "n_components", "shared_inputs", "events_shared",
+                                   "slots_per_launch"),
+         donate_argnames=("states",))
+def _scan_cohort_sharded(
+    mesh,
+    prob: _CompactProb,
+    states,  # 7-tuple state pytree, leading scenario axis (always batched)
+    U: jax.Array,  # (K, K)
+    mu: jax.Array,  # (I,)
+    inv_service: jax.Array,  # (I,)
+    sel_cmp: jax.Array,  # (I, S)
+    stream_cmp: jax.Array,  # (I, S)
+    valid_cmp: jax.Array,  # (I, S)
+    succ_map: jax.Array,  # (I, S) int32
+    term_f: jax.Array,  # (I,)
+    adj_rows: jax.Array,  # (I, C)
+    actual_s: jax.Array,  # (S?, Tc, I, C) actual arrivals (unbatched if shared)
+    pred_s: jax.Array,  # (S?, Tc, I, C)
+    nxt_s: jax.Array,  # (S?, Tc, I, C)
+    Vs: jax.Array,  # (S,)
+    betas: jax.Array,  # (S,)
+    events_s=None,  # (S?, Tc, I) (mu_t, gamma_t, alive_t) triple, or None
+    scheduler: str = "potus",
+    use_pallas: bool = False,
+    age_cap: int = 64,
+    n_components: int = 1,
+    shared_inputs: bool = False,
+    events_shared: bool = False,
+    slots_per_launch: int = 1,
+):
+    """:func:`_scan_cohort_fused` over an instance mesh (DESIGN.md §13).
+
+    One ``shard_map`` wraps the whole chunk scan: every (I, …)-shaped array
+    — queue state, arrival streams, event-trace rows, per-instance consts —
+    is row-sharded along :data:`~repro.core.sharded.COHORT_AXIS` for the
+    *entire* scan, while ``U``, ``comp_count``, and the response
+    accumulators stay replicated. The scenario ``vmap`` runs *inside* the
+    shard_map (its axis is replicated), so a sweep partition's scans fold
+    their collectives together. Per slot, the only cross-device traffic is
+    the compact decision fold plus the (I, Atot) landing ``psum``
+    (:func:`~repro.core.sharded.cohort_slot_payload_floats`).
+
+    Requires ``scheduler in COMPACT_SCHEDULERS`` (the dense ``potus-loop``
+    reference path materializes (I, I) and is rejected upstream with
+    ``UnsupportedEngineOption``). Under ``use_pallas`` the slot kernel runs
+    per-shard **only on a 1-shard mesh** — Pallas bodies cannot contain
+    collectives — and silently falls back to the compact XLA step on
+    multi-shard meshes (the documented megakernel fallback, DESIGN.md §13).
+    On a 1-shard mesh every collective is the identity, so this path is
+    bitwise-equal to the dense scan there.
+    """
+    if scheduler not in COMPACT_SCHEDULERS:
+        raise ValueError(
+            f"sharded cohort scan requires a compact scheduler "
+            f"{COMPACT_SCHEDULERS}, got {scheduler!r}"
+        )
+    n_shards = mesh.shape[COHORT_AXIS]
+    kernel_path = (use_pallas and scheduler == "potus" and events_s is None
+                   and n_shards == 1)
+
+    def local(prob_l, states_l, U, mu, inv_service, sel_cmp, stream_cmp,
+              valid_cmp, succ_map, term_f, adj_rows, actual_l, pred_l, nxt_l,
+              Vs, betas, *ev_l):
+        ev = ev_l[0] if ev_l else None
+        comp_onehot = jax.nn.one_hot(prob_l.inst_comp, n_components, dtype=mu.dtype)
+
+        def one(state, actual, pred, nxt, V, beta, ev_one):
+            T = actual.shape[0]
+            consts = _step_consts(prob_l, comp_onehot, U, mu, inv_service,
+                                  sel_cmp, stream_cmp, valid_cmp, succ_map,
+                                  term_f, adj_rows, V, beta)
+            if kernel_path and ev_one is None:
+                return _kernel_launches(consts, state, actual, pred, nxt,
+                                        scheduler, age_cap, slots_per_launch)
+
+            def step(st, x):
+                return compact_slot_step(consts, st, x, scheduler=scheduler,
+                                         age_cap=age_cap, axis=COHORT_AXIS,
+                                         n_shards=n_shards)
+
+            xs = (actual, pred, nxt, jnp.arange(T))
+            if ev_one is not None:
+                xs = xs + (ev_one,)
+            final, (backlog, cost, capped, served) = jax.lax.scan(step, state, xs)
+            return final, (backlog, cost, capped.sum(), served.sum())
+
+        ev_ax = None if (ev is None or events_shared) else 0
+        in_axes = ((0,) + ((None, None, None) if shared_inputs else (0, 0, 0))
+                   + (0, 0, ev_ax))
+        return jax.vmap(one, in_axes=in_axes)(
+            states_l, actual_l, pred_l, nxt_l, Vs, betas, ev
+        )
+
+    A = COHORT_AXIS
+    prob_specs = _CompactProb(
+        inst_comp=P(A), inst_container=P(A), gamma=P(A),
+        comp_count=P(None), is_spout=P(A),
+    )
+    arr_spec = P(None, A, None) if shared_inputs else P(None, None, A, None)
+    ev_specs = () if events_s is None else (
+        ((P(None, A),) * 3 if events_shared else (P(None, None, A),) * 3),
+    )
+    ev_args = () if events_s is None else (events_s,)
+    # replicated metrics out (values are psummed inside the step, so every
+    # shard holds the global series; check_rep=False skips the proof)
+    met_specs = (P(None, None), P(None, None), P(None), P(None))
+    return shard_map_compat(
+        local,
+        mesh=mesh,
+        in_specs=(
+            prob_specs, cohort_state_specs(), P(None, None), P(A), P(A),
+            P(A, None), P(A, None), P(A, None), P(A, None), P(A), P(A, None),
+            arr_spec, arr_spec, arr_spec, P(None), P(None),
+        ) + ev_specs,
+        out_specs=(cohort_state_specs(), met_specs),
+    )(prob, states, U, mu, inv_service, sel_cmp, stream_cmp, valid_cmp,
+      succ_map, term_f, adj_rows, actual_s, pred_s, nxt_s, Vs, betas, *ev_args)
 
 
 # ---------------------------------------------------------------------------
@@ -600,6 +771,7 @@ def _run_chunked_cohort(
     W: int,
     chunk: int | None,
     slots_per_launch: int = 1,
+    mesh=None,  # instance mesh -> _scan_cohort_sharded (DESIGN.md §13)
 ):
     """Stream the fused scan ``chunk`` slots at a time (DESIGN.md §11.2).
 
@@ -629,6 +801,13 @@ def _run_chunked_cohort(
         jnp.zeros((Sn, I, Sc, Atot), jnp.float32),
         jnp.zeros((Sn, I, Atot), jnp.float32),
     )
+    if mesh is not None:
+        # place the carry on the mesh up front; chunk inputs get resharded by
+        # the jitted scan per its shard_map in_specs
+        carry = tuple(
+            jax.device_put(cr, named(mesh, sp))
+            for cr, sp in zip(carry, cohort_state_specs()[:5])
+        )
     resp_mass = np.zeros((Sn, n_components, T + W1), f32)
     resp_time = np.zeros((Sn, n_components, T + W1), f32)
     backlogs: list[np.ndarray] = []
@@ -647,9 +826,7 @@ def _run_chunked_cohort(
         if ev_host is not None:
             esl = (slice(t0, t1),) if ev_shared else (slice(None), slice(t0, t1))
             ev_c = tuple(jnp.asarray(e[esl]) for e in ev_host)
-        states, (h, cost, capped, served) = _scan_cohort_fused(
-            prob,
-            states,
+        kwargs = dict(
             actual_s=jnp.asarray(act[sl]),
             pred_s=jnp.asarray(pred[sl]),
             nxt_s=jnp.asarray(nxt[sl]),
@@ -657,7 +834,6 @@ def _run_chunked_cohort(
             betas=jnp.asarray(betas, jnp.float32),
             events_s=ev_c,
             events_shared=ev_shared,
-            edges=cpt.edges,
             scheduler=scheduler,
             use_pallas=use_pallas,
             age_cap=age_cap,
@@ -666,6 +842,12 @@ def _run_chunked_cohort(
             slots_per_launch=slots_per_launch,
             **dev,
         )
+        if mesh is None:
+            states, (h, cost, capped, served) = _scan_cohort_fused(
+                prob, states, edges=cpt.edges, **kwargs)
+        else:
+            states, (h, cost, capped, served) = _scan_cohort_sharded(
+                mesh, prob, states, **kwargs)
         carry = states[:5]
         rm, rt = np.asarray(states[5]), np.asarray(states[6])
         g0 = t0 - age_cap  # global source slot of the slab's first column
@@ -701,8 +883,10 @@ def _run_cohort_fused_impl(
     service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
     chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
     slots_per_launch: int = 1,  # megakernel: slots fused per kernel launch (DESIGN.md §12)
+    sharded: bool = False,  # shard the scan over an instance mesh (DESIGN.md §13)
+    mesh=None,  # explicit mesh override (tests/benchmarks); implies sharded
 ) -> CohortResult:
-    """Drop-in fused replacement for :func:`repro.core.cohort.run_cohort_sim`.
+    """Fused cohort engine implementation behind ``simulate(EngineSpec)``.
 
     ``service`` adds the token-length service-time axis: ``topo.inst_mu``
     (and event-trace ``mu_t`` rows) stay in raw capacity units — tokens/slot
@@ -727,9 +911,22 @@ def _run_cohort_fused_impl(
         raise ValueError(f"chunk must be a positive slot count, got {chunk}")
     if slots_per_launch < 1:
         raise ValueError(f"slots_per_launch must be >= 1, got {slots_per_launch}")
+    if mesh is None and sharded:
+        mesh = instance_mesh(topo.n_instances)
+    if mesh is not None:
+        _check_sharded_scheduler(cfg.scheduler)
+        if topo.n_instances % mesh.shape[COHORT_AXIS] != 0:
+            raise ValueError(
+                f"mesh size {mesh.shape[COHORT_AXIS]} does not divide "
+                f"I={topo.n_instances}"
+            )
     W = cfg.window
     actual = materialize_arrivals(actual, topo, T + W + 1)
-    prob = make_problem(topo, net, inst_container)
+    # compact schedulers never need the (I, I) edge mask — build the O(I)
+    # problem so fleet-scale (and sharded) runs stay linear in I
+    prob = (_compact_prob(topo, inst_container)
+            if cfg.scheduler in COMPACT_SCHEDULERS
+            else make_problem(topo, net, inst_container))
     cpt = _compact(topo)
     mask = _stream_mask(topo)
     act, pred, nxt, q_rem0 = _prep_streams(actual, predicted, T, W, cpt, mask)
@@ -737,7 +934,7 @@ def _run_cohort_fused_impl(
         prob, _device_inputs(topo, net, cpt, service), cpt,
         cfg.scheduler, cfg.use_pallas, age_cap, topo.n_components,
         True, act, pred, nxt, q_rem0, [cfg.V], [cfg.beta],
-        host_trace(events, T), True, T, W, chunk, slots_per_launch,
+        host_trace(events, T), True, T, W, chunk, slots_per_launch, mesh=mesh,
     )
     weights = np.einsum("sic,ic->cs", act, mask)
     sat = float(capped[0]) / max(float(served[0]), 1e-9)
@@ -749,18 +946,17 @@ def _run_cohort_fused_impl(
     )
 
 
-def run_cohort_fused(*args, **kwargs) -> CohortResult:
-    """Deprecated alias of the fused cohort engine entry point — use
-    :func:`repro.core.simulate` with an :class:`~repro.core.engine.EngineSpec`
-    (``engine="cohort-fused"``). Thin shim, removed one release after the
-    unified facade landed (DESIGN.md §12)."""
-    warnings.warn(
-        "run_cohort_fused(...) is deprecated; use "
-        "repro.core.simulate(EngineSpec(engine='cohort-fused', ...))",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return _run_cohort_fused_impl(*args, **kwargs)
+def _check_sharded_scheduler(scheduler: str) -> None:
+    """Sharded cohort runs require a compact scheduler: ``potus-loop`` keeps
+    the dense (I, I) reference path, which has no shard layout."""
+    if scheduler not in COMPACT_SCHEDULERS:
+        from .engine import UnsupportedEngineOption  # lazy: engine imports us
+
+        raise UnsupportedEngineOption(
+            "cohort-fused", "sharded",
+            reason=f"scheduler {scheduler!r} keeps the dense (I, I) reference "
+                   f"path; sharded runs support {COMPACT_SCHEDULERS}",
+        )
 
 
 def run_fused_sweep(
@@ -783,7 +979,13 @@ def run_fused_sweep(
     whether they carry a disruption trace) exactly like the JAX engine, and
     each partition runs as one vmapped scan — response-time grids (Figs.
     4/6) and disruption grids compile once per partition instead of looping
-    Python scenarios. Returns (results in grid order, n_batches)."""
+    Python scenarios. Returns (results in grid order, n_batches).
+
+    With ``spec.sharded`` every partition's vmapped scan runs over the
+    instance mesh (:func:`_scan_cohort_sharded`); a partition whose
+    scheduler has no shard layout (``potus-loop``) raises
+    ``UnsupportedEngineOption`` rather than silently running dense
+    (DESIGN.md §13)."""
     if age_cap < 2:
         raise ValueError(f"age_cap must be >= 2, got {age_cap}")
     if slots_per_launch < 1:
@@ -795,7 +997,20 @@ def run_fused_sweep(
     missing = [e for e in spec.events if e not in events_map]
     if missing:
         raise KeyError(f"spec names event scenarios {missing} not present in events_map")
-    prob = make_problem(topo, net, inst_container)
+    mesh = None
+    if getattr(spec, "sharded", False):
+        for scn in scenarios:  # fail before any partition runs — no silent fallback
+            _check_sharded_scheduler(scn.scheduler)
+        mesh = instance_mesh(topo.n_instances)
+    probs: dict[bool, object] = {}
+
+    def prob_for(scheduler: str):
+        compact = scheduler in COMPACT_SCHEDULERS
+        if compact not in probs:
+            probs[compact] = (_compact_prob(topo, inst_container) if compact
+                              else make_problem(topo, net, inst_container))
+        return probs[compact]
+
     cpt = _compact(topo)
     mask = _stream_mask(topo)
     reach = _reachability(topo)
@@ -829,10 +1044,10 @@ def run_fused_sweep(
                 [trace_of(scn) for scn in group], T,
             )
         resp_mass, resp_time, backlog, cost, capped, served = _run_chunked_cohort(
-            prob, dev, cpt, scheduler, use_pallas, age_cap, topo.n_components,
-            shared, act_s, pred_s, nxt_s, q0_s,
+            prob_for(scheduler), dev, cpt, scheduler, use_pallas, age_cap,
+            topo.n_components, shared, act_s, pred_s, nxt_s, q0_s,
             [scn.V for scn in group], [scn.beta for scn in group],
-            ev_host, ev_shared, T, W, chunk, slots_per_launch,
+            ev_host, ev_shared, T, W, chunk, slots_per_launch, mesh=mesh,
         )
         for s, scn in enumerate(group):
             sat = float(capped[s]) / max(float(served[s]), 1e-9)

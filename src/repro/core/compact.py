@@ -37,6 +37,26 @@ swaps the few ops Pallas TPU cannot lower â€” scatter/gather and ``lax.sort`` â€
 for one-hot contractions, dynamic slices, and the O(CÂ²) precedence-rank
 water-fill (the same substitution ``kernels/potus_schedule.py`` makes);
 both variants agree bitwise on the dyadic tier and to 1 ulp elsewhere.
+
+**Instance sharding** (DESIGN.md Â§13): the same row-independence that powers
+the collapse makes the decision shard over an instance mesh. With
+``axis="i"`` (and ``n_shards`` devices) every ``(I, â€¦)`` input is this
+shard's row block, and the per-(container, component) candidate min folds
+across shards with one ``lax.pmin`` of the (K, C) ``(M, J)`` pair (argmin
+indices converted to *global* instance ids first, so the
+lowest-global-index tie-break survives the fold bitwise â€” ``min`` selects
+an element, it never rounds). One more (K, C) integer ``pmin`` recovers the
+target's *container* (only the owning shard knows it); per-component
+reductions (``_u_col_sums``, JSQ's winner) fold the same way, and
+``compact_slot_step`` adds the only O(I)-sized collective â€” a ``psum`` of
+the landing age-buckets, the physical tuple transfer. Nothing (I, I)-shaped
+ever crosses devices. ``axis=None`` is exactly the dense path; on a 1-shard
+mesh every collective is the identity, so sharded-vs-dense parity is
+bitwise there and on the dyadic tier for any shard count (cross-shard
+``psum`` re-associates float sums, which dyadic masses cannot observe).
+``axis`` and ``kernel_safe`` are mutually exclusive â€” collectives cannot
+lower into a Pallas body, which is why the megakernel runs per-shard only
+on single-shard meshes (DESIGN.md Â§13).
 """
 from __future__ import annotations
 
@@ -127,15 +147,50 @@ def _u_cols(U: jax.Array, inst_cont: jax.Array, kernel_safe: bool) -> jax.Array:
     return U[:, inst_cont]
 
 
-def _u_col_sums(U: jax.Array, cp: CompactProblem, kernel_safe: bool) -> jax.Array:
-    """(K, C) per-component sums of alive columns of ``U[:, k_j]``."""
+def _u_col_sums(U: jax.Array, cp: CompactProblem, kernel_safe: bool,
+                axis: str | None = None) -> jax.Array:
+    """(K, C) per-component sums of alive columns of ``U[:, k_j]``.
+
+    Under sharding (``axis``) the columns of ``U[:, k_j]`` are this shard's
+    instances; the (K, C) partials fold with one ``psum`` (re-associates the
+    dense column order â€” invisible on the dyadic tier, identity on 1 shard).
+    """
     C = cp.comp_count.shape[0]
     u_cols = _u_cols(U, cp.inst_cont, kernel_safe) * cp.alive[None, :]  # (K, I)
     if kernel_safe:
         oh = _onehot_cols(cp.inst_comp, C, U.dtype)  # (I, C)
-        return jax.lax.dot_general(u_cols, oh, (((1,), (0,)), ((), ())),
-                                   preferred_element_type=U.dtype)
-    return jnp.zeros((U.shape[0], C), U.dtype).at[:, cp.inst_comp].add(u_cols)
+        out = jax.lax.dot_general(u_cols, oh, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=U.dtype)
+    else:
+        out = jnp.zeros((U.shape[0], C), U.dtype).at[:, cp.inst_comp].add(u_cols)
+    if axis is not None:
+        out = jax.lax.psum(out, axis)
+    return out
+
+
+def _fold_min_with_payload(m_loc: jax.Array, p_loc: jax.Array, sentinel,
+                           axis: str) -> tuple[jax.Array, jax.Array]:
+    """Fold a (value, payload) argmin pair across ``axis``: global min of
+    ``m_loc`` plus the smallest payload among shards attaining it. With
+    payloads pre-offset to global instance ids this reproduces the dense
+    lowest-global-index tie-break bitwise (``pmin`` selects elements)."""
+    m = jax.lax.pmin(m_loc, axis)
+    p = jax.lax.pmin(jnp.where(m_loc == m, p_loc, sentinel), axis)
+    return m, p
+
+
+def _owner_gather(idx_g: jax.Array, values: jax.Array, off: jax.Array,
+                  n_local: int, sentinel_fill: int, axis: str) -> jax.Array:
+    """values[idx_g] for global instance ids ``idx_g`` when only the owning
+    shard holds ``values`` (its (n_local,) row block): the owner contributes
+    the element, everyone else an int sentinel folded away by ``pmin``.
+    Out-of-range ids (the I_glob "no target" sentinel) yield
+    ``sentinel_fill`` â€” callers only read those entries where the associated
+    mass is zero."""
+    own = (idx_g >= off) & (idx_g < off + n_local)
+    local = jnp.clip(idx_g - off, 0, n_local - 1)
+    contrib = jnp.where(own, values[local], jnp.int32(2**30))
+    return jnp.minimum(jax.lax.pmin(contrib, axis), sentinel_fill)
 
 
 def _fill_rows_sort(m, j_c, budget, gamma):
@@ -168,9 +223,11 @@ def _fill_rows_rank(m, j_c, budget, gamma):
     return jnp.minimum(after, g) - jnp.minimum(before, g)
 
 
-def _potus_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
-    I = cp.inst_comp.shape[0]
+def _potus_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe,
+                  axis=None, n_shards=1):
+    I = cp.inst_comp.shape[0]  # this shard's rows when axis is set
     C = cp.comp_count.shape[0]
+    I_all = I * n_shards if axis is not None else I
     edge = cp.adj_rows > 0.0
     # shared per-(container, component) cheapest candidate: O(KÂ·I), no (I, I).
     # _BIG stands in for +inf so downstream one-hot contractions stay NaN-free;
@@ -179,11 +236,18 @@ def _potus_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
     t1 = jnp.where((cp.alive > 0.0)[None, :],
                    V * _u_cols(U, cp.inst_cont, kernel_safe) + q_in[None, :], big)
     M, J = _colmin_per_comp(t1, cp.inst_comp, C, kernel_safe)
+    if axis is not None:
+        # fold the shard-local (M, J) into the global cheapest candidate:
+        # one small pmin pair, with J lifted to global instance ids first so
+        # the dense lowest-index tie-break is preserved bitwise
+        off = jax.lax.axis_index(axis) * I
+        J = jnp.where(J < I, J + off, I_all)
+        M, J = _fold_min_with_payload(M, J, I_all, axis)
     m_raw = _rows_of(M, cp.inst_cont, kernel_safe) - beta * q_out  # row-constant shift
     cand = edge & (m_raw < 0.0)
     m = jnp.where(cand, m_raw, _INF)
     j_row = _rows_of(J.astype(U.dtype), cp.inst_cont, kernel_safe).astype(jnp.int32)
-    j_c = jnp.where(edge, j_row, I)
+    j_c = jnp.where(edge, j_row, I_all)
     budget = jnp.where(cand, jnp.maximum(q_out, 0.0), 0.0)
     fill_rows = _fill_rows_rank if kernel_safe else _fill_rows_sort
     fill = fill_rows(m, j_c, budget, cp.gamma)
@@ -193,8 +257,13 @@ def _potus_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
     even_per = shortfall / jnp.maximum(cp.comp_count, 1.0)[None, :]
     # cost: the point part gathers U at the target, the even part uses the
     # per-component alive-column sum of U â€” both O(IÂ·C)
-    u_sum = _u_col_sums(U, cp, kernel_safe)  # (K, C)
-    if kernel_safe:
+    u_sum = _u_col_sums(U, cp, kernel_safe, axis)  # (K, C)
+    if axis is not None:
+        # only the target's owning shard knows its container: one more (K, C)
+        # integer pmin; the K-1 clamp is only reached where fill == 0
+        k_j = _owner_gather(J, cp.inst_cont, off, I, U.shape[0] - 1, axis)  # (K, C)
+        u_point = U[cp.inst_cont[:, None], _rows_of(k_j, cp.inst_cont, False)]
+    elif kernel_safe:
         oh_j = _onehot_cols(j_c, I, U.dtype)  # (I, C, I); index I -> all-zero
         k_jc = jnp.sum(oh_j * cp.inst_cont.astype(U.dtype)[None, None, :],
                        axis=-1).astype(jnp.int32)  # (I, C); 0 where j_c == I
@@ -204,6 +273,8 @@ def _potus_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
     else:
         jc_safe = jnp.minimum(j_c, I - 1)
         u_point = U[cp.inst_cont[:, None], cp.inst_cont[jc_safe]]
+    # under sharding the cost is this shard's partial (rows are local);
+    # compact_slot_step psums it with the other slot scalars
     cost = (fill * u_point).sum() + (even_per * _rows_of(u_sum, cp.inst_cont,
                                                          kernel_safe)).sum()
     return CompactDecision(fill + shortfall, fill, j_c, even_per, cost)
@@ -218,28 +289,42 @@ def _ship_amounts_compact(cp, q_out, must_send):
     return jnp.maximum(q_out * scale, must_send)
 
 
-def _shuffle_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
+def _shuffle_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe,
+                    axis=None, n_shards=1):
     I = cp.inst_comp.shape[0]
     C = cp.comp_count.shape[0]
+    I_all = I * n_shards if axis is not None else I
     ship = _ship_amounts_compact(cp, q_out, must_send)
     can = (cp.adj_rows > 0.0) & (cp.comp_count > 0.0)[None, :]
     per_target = jnp.where(can, ship / jnp.maximum(cp.comp_count, 1.0)[None, :], 0.0)
     shipped = per_target * cp.comp_count[None, :]
-    u_sum = _u_col_sums(U, cp, kernel_safe)  # (K, C)
+    u_sum = _u_col_sums(U, cp, kernel_safe, axis)  # (K, C)
     cost = (per_target * _rows_of(u_sum, cp.inst_cont, kernel_safe)).sum()
     zeros = jnp.zeros((I, C), ship.dtype)
-    return CompactDecision(shipped, zeros, jnp.full((I, C), I, jnp.int32), per_target, cost)
+    return CompactDecision(shipped, zeros, jnp.full((I, C), I_all, jnp.int32),
+                           per_target, cost)
 
 
-def _jsq_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
+def _jsq_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe,
+                axis=None, n_shards=1):
     I = cp.inst_comp.shape[0]
     C = cp.comp_count.shape[0]
+    I_all = I * n_shards if axis is not None else I
     ship = _ship_amounts_compact(cp, q_out, must_send)
     # winner[c] = argmin q_in over the alive instances of c (ties -> lowest)
     cand = _onehot_cols(cp.inst_comp, C, jnp.bool_) & (cp.alive > 0.0)[:, None]  # (I, C)
     masked_q = jnp.where(cand, q_in[:, None], _INF)
     winner = jnp.argmin(masked_q, axis=0).astype(jnp.int32)  # (C,)
-    if kernel_safe:
+    if axis is not None:
+        # fold the per-component winner like the POTUS candidate: global-id
+        # lift, pmin on (value, id), then an owner pmin for its container
+        off = jax.lax.axis_index(axis) * I
+        w_min = jnp.min(masked_q, axis=0)  # (C,)
+        w_min, winner = _fold_min_with_payload(w_min, winner + off, I_all, axis)
+        win_ok = w_min < _INF  # some alive instance of c exists somewhere
+        k_win = _owner_gather(winner, cp.inst_cont, off, I, U.shape[0] - 1, axis)
+        u_win = U[cp.inst_cont[:, None], k_win[None, :]]  # (I, C)
+    elif kernel_safe:
         oh_w = _onehot_cols(winner, I, U.dtype)  # (C, I)
         win_alive = jnp.sum(oh_w * cp.alive[None, :], axis=1)
         iota_c = jax.lax.broadcasted_iota(jnp.int32, (C, I), 0)
@@ -258,7 +343,7 @@ def _jsq_decide(cp, U, q_in, q_out, must_send, V, beta, kernel_safe):
         u_win = U[cp.inst_cont[:, None], cp.inst_cont[winner][None, :]]  # (I, C)
     can = (cp.adj_rows > 0.0) & win_ok[None, :]
     shipped = jnp.where(can, ship, 0.0)
-    j_point = jnp.where(can, winner[None, :], I)
+    j_point = jnp.where(can, winner[None, :], I_all)
     cost = (shipped * u_win).sum()
     return CompactDecision(shipped, shipped, j_point, jnp.zeros_like(shipped), cost)
 
@@ -276,10 +361,26 @@ def compact_decide(
     V,
     beta,
     kernel_safe: bool = False,
+    axis: str | None = None,
+    n_shards: int = 1,
 ) -> CompactDecision:
     """One slot's scheduling decision in compact form; ``scheduler`` must be
-    in :data:`COMPACT_SCHEDULERS`."""
-    return _DECIDERS[scheduler](cp, U, q_in, q_out, must_send, V, beta, kernel_safe)
+    in :data:`COMPACT_SCHEDULERS`.
+
+    With ``axis`` set (a mesh axis name, inside ``shard_map``) every (I, â€¦)
+    argument is this shard's row block of the global problem, ``q_in``
+    included â€” the local column min covers exactly the local instances, so
+    no all-gather is needed. ``j_point`` then holds *global* instance ids
+    with ``I Â· n_shards`` as the "no target" sentinel, and ``cost`` is the
+    shard-local partial (``compact_slot_step`` folds it). Incompatible with
+    ``kernel_safe`` â€” collectives cannot lower into a Pallas body.
+    """
+    if axis is not None and kernel_safe:
+        raise ValueError("compact_decide: axis (sharded) and kernel_safe are "
+                         "mutually exclusive â€” Pallas bodies cannot contain "
+                         "collectives (DESIGN.md Â§13)")
+    return _DECIDERS[scheduler](cp, U, q_in, q_out, must_send, V, beta, kernel_safe,
+                                axis, n_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -365,6 +466,8 @@ def compact_slot_step(
     scheduler: str,
     age_cap: int,
     kernel_safe: bool = False,
+    axis: str | None = None,
+    n_shards: int = 1,
 ):
     """One slot of the cohort dynamics (stages 1-5 of DESIGN.md Â§8) with the
     compact one-dispatch decision â€” no (I, I) tensor anywhere. Mirrors
@@ -376,6 +479,17 @@ def compact_slot_step(
     (DESIGN.md Â§9) happens here in compact form â€” alive counts, effective
     gamma, cancelled mandatory dispatch on dead rows â€” matching
     ``potus.apply_caps`` numerically.
+
+    With ``axis`` set (inside ``shard_map`` over an instance mesh,
+    DESIGN.md Â§13) every (I, â€¦) array in ``c``, ``state``, and ``xs`` â€”
+    including the disruption trace rows â€” is this shard's row block;
+    ``c.comp_count`` and ``U`` stay replicated, and the response
+    accumulators are replicated (every shard folds the same global (C, Atot)
+    ``cmass``). Cross-device traffic per slot: the decision fold inside
+    :func:`compact_decide` (a few (K, C) pmins), one (C,) psum of alive
+    counts under events, the (I_glob, Atot) landing psum â€” the physical
+    tuple transfer â€” plus (C, Atot) even-spread/served psums and the scalar
+    metrics. Nothing (I, I)-shaped crosses devices.
     """
     act_t, pred_t, new_pred, t, *ev = xs
     q_rem, admit, q_in_tag, q_out_tag, transit, resp_mass, resp_time = state
@@ -408,6 +522,8 @@ def compact_slot_step(
                 preferred_element_type=dt)[0]
         else:
             comp_count = jnp.zeros((C,), dt).at[c.inst_comp].add(alive_row)
+        if axis is not None:
+            comp_count = jax.lax.psum(comp_count, axis)
         cp = CompactProblem(c.inst_comp, c.inst_cont, gamma_row, comp_count,
                             c.adj_rows, alive_row)
         must_send = must_send * alive_row[:, None]
@@ -416,9 +532,12 @@ def compact_slot_step(
         cp = CompactProblem(c.inst_comp, c.inst_cont, c.gamma, c.comp_count,
                             c.adj_rows, jnp.ones((I,), dt))
     dec = compact_decide(scheduler, cp, c.U, q_in_arr, q_out_arr, must_send,
-                         c.V, c.beta, kernel_safe)
+                         c.V, c.beta, kernel_safe, axis, n_shards)
     backlog = q_in_arr.sum() + c.beta * q_out_arr.sum()
     cost = dec.cost
+    if axis is not None:
+        backlog = jax.lax.psum(backlog, axis)
+        cost = jax.lax.psum(cost, axis)
 
     # -- 3. drain sources oldest-first, split over targets -------------------
     shipped_cmp = _to_cmp(c, dec.shipped, kernel_safe)
@@ -448,10 +567,21 @@ def compact_slot_step(
         oh_t = _onehot_cols(dec.j_point.reshape(I * C), I, dt)  # (I*C, I); I -> zero row
         land = jax.lax.dot_general(oh_t, wd, (((0,), (0,)), ((), ())),
                                    preferred_element_type=dt)
+    elif axis is not None:
+        # point targets are global ids: scatter the local sources' mass into
+        # the global landing buffer, fold it (the one O(I)-sized collective â€”
+        # the physical tuple transfer), keep our own row block
+        I_all = I * n_shards
+        land_g = jnp.zeros((I_all + 1, Atot), dt).at[
+            dec.j_point.reshape(I * C)].add(wd)[:I_all]
+        land_g = jax.lax.psum(land_g, axis)
+        land = jax.lax.dynamic_slice_in_dim(land_g, jax.lax.axis_index(axis) * I, I)
     else:
         land = jnp.zeros((I + 1, Atot), dt).at[dec.j_point.reshape(I * C)].add(wd)[:I]
     # even spread: per-component contraction, then broadcast to alive instances
     ev_cb = jnp.einsum("ic,icb->cb", w_ev, d_dense)  # (C, Atot)
+    if axis is not None:
+        ev_cb = jax.lax.psum(ev_cb, axis)
     if kernel_safe:
         ev_rows = jax.lax.dot_general(c.comp_onehot, ev_cb, (((1,), (0,)), ((), ())),
                                       preferred_element_type=dt)  # (I, Atot)
@@ -468,6 +598,10 @@ def compact_slot_step(
         c.comp_onehot, served_b * c.term_f[:, None], (((0,), (0,)), ((), ())),
         preferred_element_type=dt,
     )  # (C, Atot)
+    if axis is not None:
+        # fold served mass so the replicated response accumulators see the
+        # global per-component completions on every shard
+        cmass = jax.lax.psum(cmass, axis)
     if kernel_safe:
         ages = jax.lax.broadcasted_iota(dt, (1, Atot), 1)  # 2-D iota (Pallas TPU)
         resp_row = jnp.maximum(age_cap - ages, 0.0)  # (1, Atot)

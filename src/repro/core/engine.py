@@ -18,9 +18,16 @@ door:
   nearest engine that does support it.
 
 The legacy entry points (``run_sim``, ``run_cohort_sim``,
-``run_cohort_fused``) remain as thin :class:`DeprecationWarning` shims for
-one release; ``run_sweep`` keeps its grid API (a sweep is a *set* of specs)
-but raises the same normalized errors.
+``run_cohort_fused``) were removed one release after this facade landed, as
+announced by their :class:`DeprecationWarning` shims; ``run_sweep`` keeps
+its grid API (a sweep is a *set* of specs) but raises the same normalized
+errors.
+
+``sharded`` appears twice by design: ``engine="sharded"`` is the plain-jax
+scan engine row-sharded over an instance mesh (DESIGN.md §7, (I, I) decision
+per slot), while ``EngineSpec(engine="cohort-fused", sharded=True)`` shards
+the compact one-dispatch cohort engine — full response-time semantics, no
+(I, I) anywhere (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -46,6 +53,9 @@ OPTION_SUPPORT = {
     "service": ("cohort-fused",),
     "age_cap": ("cohort-fused",),
     "slots_per_launch": ("cohort-fused",),
+    # engine="sharded" *is* sharded; on cohort-fused the flag shards the
+    # compact scan over the instance mesh (DESIGN.md §13)
+    "sharded": ("sharded", "cohort-fused"),
 }
 
 #: proximity order used to name the "nearest" supporting engine: the scan
@@ -67,16 +77,19 @@ class UnsupportedEngineOption(ValueError):
     engine×option pair instead of per-engine ad-hoc messages.
     """
 
-    def __init__(self, engine: str, option: str, supported: tuple = ()):  # noqa: D107
+    def __init__(self, engine: str, option: str, supported: tuple = (),
+                 reason: str = ""):  # noqa: D107
         self.engine = engine
         self.option = option
+        self.reason = reason
         supported = supported or OPTION_SUPPORT.get(option, ENGINES)
         self.nearest = next((e for e in _NEAREST.get(engine, ENGINES)
                              if e in supported), None)
         hint = (f"; the nearest engine that does is engine={self.nearest!r}"
                 if self.nearest else "")
+        why = f" ({reason})" if reason else ""
         super().__init__(
-            f"engine={engine!r} does not support option {option!r}{hint}"
+            f"engine={engine!r} does not support option {option!r}{why}{hint}"
         )
 
 
@@ -120,6 +133,7 @@ class EngineSpec:
     drain_margin: int | None = None
     age_cap: int = 64
     slots_per_launch: int = 1  # megakernel slots per launch (DESIGN.md §12)
+    sharded: bool = False  # shard cohort-fused over the instance mesh (DESIGN.md §13)
 
     def config(self):
         """The legacy :class:`~repro.core.simulator.SimConfig` equivalent."""
@@ -127,7 +141,7 @@ class EngineSpec:
 
         return SimConfig(V=self.V, beta=self.beta, window=self.window,
                          scheduler=self.scheduler, use_pallas=self.use_pallas,
-                         sharded=self.engine == "sharded")
+                         sharded=self.engine == "sharded" or self.sharded)
 
     def _set_options(self):
         """Option names carrying a non-default value. None-default options
@@ -150,12 +164,12 @@ class EngineSpec:
 def simulate(spec: EngineSpec):
     """Run one fully-specified simulation; the unified entry point.
 
-    Routes to the engine implementations the legacy entry points wrap, so a
-    spec reproduces the corresponding legacy call bit for bit (asserted on
-    the dyadic tier by ``tests/test_engine_api.py``). Returns the engine's
-    native result type: :class:`~repro.core.simulator.SimResult` for the
-    scan engines, :class:`~repro.core.cohort.CohortResult` for the cohort
-    engines.
+    Routes to the engine implementations (``_run_sim_impl`` /
+    ``_run_cohort_sim_impl`` / ``_run_cohort_fused_impl``), whose parity is
+    asserted on the dyadic tier by ``tests/test_engine_api.py``. Returns the
+    engine's native result type: :class:`~repro.core.simulator.SimResult`
+    for the scan engines, :class:`~repro.core.cohort.CohortResult` for the
+    cohort engines.
     """
     spec.validate()
     cfg = spec.config()
@@ -180,4 +194,5 @@ def simulate(spec: EngineSpec):
         spec.T, cfg, warmup=spec.warmup, drain_margin=spec.drain_margin,
         age_cap=spec.age_cap, events=spec.events, service=spec.service,
         chunk=spec.chunk, slots_per_launch=spec.slots_per_launch,
+        sharded=spec.sharded,
     )

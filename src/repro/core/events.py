@@ -15,8 +15,8 @@ container-level correlated outages via the placement vector — compiles to an
 * ``mu_t``     (T, I) — *effective* processing capacity (0 where dead);
 * ``gamma_t``  (T, I) — *effective* transmission capacity (0 where dead);
 
-which every engine consumes per slot (``run_sim``, ``run_sim_sharded``,
-``run_cohort_sim``, ``run_cohort_fused``, and ``run_sweep`` where named
+which every engine consumes per slot (``simulate`` on all four engines,
+``run_sim_sharded``, and ``run_sweep`` where named
 traces form a vmappable scenario axis). Scheduling under a trace follows the
 **masking rule** (DESIGN.md §9): dead instances are *priced out* — their
 price-matrix columns become +inf, their rows get zero transmission budget,

@@ -118,7 +118,7 @@ def run_event_sim(
     if events is not None:
         raise ValueError(
             "run_event_sim does not model disruption traces; run events "
-            "scenarios on the slot engines (run_sim / run_cohort_fused)"
+            "scenarios on the slot engines (simulate with engine=jax/cohort-fused)"
         )
     if not 0.0 <= jitter < 1.0:
         raise ValueError(f"jitter must be in [0, 1), got {jitter}")

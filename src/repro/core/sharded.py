@@ -19,7 +19,7 @@ over an instance-partitioned 1-D device mesh via ``shard_map``:
 With D devices the per-device memory for the (I × I) price / decision
 matrices drops to I²/D, which is what lets ``potus_schedule`` and
 ``sim_step`` scale past single-device HBM. On one device the path is the
-identity sharding and agrees elementwise with `core.simulator.run_sim`
+identity sharding and agrees elementwise with the plain-jax engine
 (tested). ``SimConfig(sharded=True)`` / ``SweepSpec(sharded=True)`` route
 through here; meshes come from the largest instance-count divisor of the
 available device count (`instance_mesh`).
@@ -29,6 +29,13 @@ The serving-fleet path (DESIGN.md §10) extends the 1-D instance mesh to a
 a batch of independent dispatcher slots with rows still sharded along
 ``"i"`` and the batch spread along ``"b"`` — batch entries never
 communicate, so fleet-scale what-if grids scale to devices = nb × ni.
+
+The *cohort-fused* engine shards over the same 1-D instance mesh but never
+forms (I, I) at all (DESIGN.md §13): its compact one-dispatch decision
+folds with a few (K, C)-shaped collectives and one (I, Atot) landing
+``psum`` per slot. This module owns the mesh builders and the shard layout
+(:func:`cohort_state_specs`, :func:`cohort_slot_payload_floats`); the
+sharded scan itself lives in ``core.cohort_fused`` next to its dense twin.
 """
 from __future__ import annotations
 
@@ -57,11 +64,45 @@ from .topology import Topology
 
 __all__ = [
     "instance_mesh", "fleet_mesh", "sharded_schedule", "sharded_schedule_batch",
-    "run_sim_sharded",
+    "run_sim_sharded", "cohort_state_specs", "cohort_slot_payload_floats",
 ]
 
 _AXIS = "i"
 _BATCH = "b"
+
+#: mesh axis name the sharded cohort-fused scan shards instances along
+#: (DESIGN.md §13); same axis the plain-jax sharded engine uses
+COHORT_AXIS = _AXIS
+
+
+def cohort_state_specs() -> tuple:
+    """``shard_map`` specs for the fused cohort engine's 7-tuple scan state
+    (leading scenario axis replicated): queue state shards by instance row
+    for the whole scan; the response accumulators are replicated — every
+    shard folds the identical global (C, Atot) completed mass, so no
+    end-of-run gather is needed (DESIGN.md §13)."""
+    return (
+        P(None, _AXIS, None, None),  # q_rem   (Sn, I, S, W+1)
+        P(None, _AXIS, None),        # admit   (Sn, I, S)
+        P(None, _AXIS, None),        # q_in    (Sn, I, Atot)
+        P(None, _AXIS, None, None),  # q_out   (Sn, I, S, Atot)
+        P(None, _AXIS, None),        # transit (Sn, I, Atot)
+        P(None, None, None),         # resp_mass (Sn, C, L) — replicated
+        P(None, None, None),         # resp_time (Sn, C, L) — replicated
+    )
+
+
+def cohort_slot_payload_floats(I: int, C: int, K: int, atot: int, n_shards: int) -> int:
+    """Per-slot cross-device payload of the sharded compact slot step, in
+    array elements (DESIGN.md §13): the (K, C) decision folds (candidate
+    min/argmin/container pmins + ``u_sum`` psum), the (I, Atot) landing
+    ``psum`` (the physical tuple transfer), the (C, Atot) even-spread and
+    served-mass folds, the (C,) alive counts under events, and two scalar
+    metrics. O(I·C)-bounded — nothing (I, I)-shaped crosses devices; 0 on a
+    single shard (every collective is the identity)."""
+    if n_shards <= 1:
+        return 0
+    return 4 * K * C + I * atot + 2 * C * atot + C + 2
 
 
 def instance_mesh(n_instances: int, devices=None) -> Mesh:
@@ -183,6 +224,7 @@ def sharded_schedule_batch(
     V: float,
     beta: float,
     method: str = "sort",
+    caps=None,  # optional (mu, gamma, alive) triple of (B, I) arrays
 ) -> jax.Array:
     """A batch of independent Algorithm-1 slots on a :func:`fleet_mesh`.
 
@@ -190,30 +232,48 @@ def sharded_schedule_batch(
     one scheduling problem (a dispatcher slot, a scenario replica) over the
     *same* static ``prob``; the per-batch ``all_gather`` of ``q_in`` runs
     along ``"i"`` only, so batch entries never communicate.
+
+    ``caps`` carries one disruption slot per batch entry as a plain
+    ``(mu, gamma, alive)`` triple of (B, I) arrays (the batched analog of
+    :func:`~repro.core.potus.caps_for_slot`): ``mu``/``gamma`` shard with
+    the rows while ``alive`` stays replicated along ``"i"`` — every shard
+    masks the full column set identically (DESIGN.md §9). This is what lets
+    the serving dispatcher route through the fleet mesh with per-replica
+    health folded in (``DispatcherConfig(sharded=True)``).
     """
     B = q_in.shape[0]
     nb = mesh.shape[_BATCH]
     if B % nb != 0:
         raise ValueError(f"batch {B} not divisible by mesh batch axis {nb}")
 
-    def local(prob, U, q_in, q_out, must_send):
+    def local(prob, U, q_in, q_out, must_send, *cap):
         q_in_full = jax.lax.all_gather(q_in, _AXIS, axis=1, tiled=True)  # (B_loc, I)
+        n_local = q_out.shape[1]
 
-        def one(qi, qo, ms):
-            x, _ = _local_schedule(prob, U, qi, qo, ms, V, beta, method)
+        def one(qi, qo, ms, *c):
+            sc = None
+            if c:
+                mu_b, gamma_b, alive_b = c
+                sc = SlotCaps(alive=alive_b, row_alive=_local_rows(alive_b, n_local),
+                              mu=mu_b, gamma=gamma_b)
+            x, _ = _local_schedule(prob, U, qi, qo, ms, V, beta, method, caps=sc)
             return x
 
-        return jax.vmap(one)(q_in_full, q_out, must_send)
+        return jax.vmap(one)(q_in_full, q_out, must_send, *cap)
 
+    cap_args = () if caps is None else tuple(caps)
+    cap_specs = () if caps is None else (
+        P(_BATCH, _AXIS), P(_BATCH, _AXIS), P(_BATCH, None),
+    )
     return shard_map_compat(
         local,
         mesh=mesh,
         in_specs=(
             _prob_specs(prob), P(None, None), P(_BATCH, _AXIS),
             P(_BATCH, _AXIS, None), P(_BATCH, _AXIS, None),
-        ),
+        ) + cap_specs,
         out_specs=P(_BATCH, _AXIS, None),
-    )(prob, U, q_in, q_out, must_send)
+    )(prob, U, q_in, q_out, must_send, *cap_args)
 
 
 def _local_sim_step(prob, U, mu, selectivity_rows, V, beta, state, new_arr,
@@ -304,7 +364,7 @@ def run_sim_sharded(
     mesh: Mesh | None = None,
     events=None,  # EventTrace | None — disruption trace (DESIGN.md §9)
 ):
-    """`run_sim` semantics on an instance-partitioned mesh (DESIGN.md §7)."""
+    """Plain-jax engine semantics on an instance-partitioned mesh (DESIGN.md §7)."""
     from .simulator import SimResult, _check_mu_override, pad_arrivals  # local import: avoid cycle
 
     _check_mu_override(mu, events)

@@ -1,6 +1,6 @@
 """Vectorized time-slot simulator (JAX engine) — paper §3 dynamics end-to-end.
 
-``run_sim`` folds :func:`repro.core.queues.slot_update` over T slots with
+The scan engine folds :func:`repro.core.queues.slot_update` over T slots with
 ``lax.scan``; the scheduler (POTUS / Shuffle / JSQ) is a callable argument.
 This engine is exact for queue backlogs and communication costs (the Fig. 5
 metrics) and scales to thousands of instances. Per-tuple response times
@@ -14,7 +14,6 @@ sweep runs as one compiled computation (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Callable
 
@@ -29,7 +28,7 @@ from .queues import SimState, effective_qout, init_state, slot_update
 from .sharded import run_sim_sharded
 from .topology import Topology
 
-__all__ = ["SimResult", "run_sim", "SimConfig", "sim_step", "pad_arrivals", "device_trace"]
+__all__ = ["SimResult", "SimConfig", "sim_step", "pad_arrivals", "device_trace"]
 
 
 def host_trace(events: EventTrace | None, T: int):
@@ -285,17 +284,3 @@ def _run_sim_impl(
         served_total=served,
         final_state=jax.device_get(state),
     )
-
-
-def run_sim(*args, **kwargs) -> SimResult:
-    """Deprecated alias of the scan-engine entry point — use
-    :func:`repro.core.simulate` with an :class:`~repro.core.engine.EngineSpec`
-    (``engine="jax"`` or ``engine="sharded"``). Thin shim, removed one
-    release after the unified facade landed (DESIGN.md §12)."""
-    warnings.warn(
-        "run_sim(...) is deprecated; use "
-        "repro.core.simulate(EngineSpec(engine='jax', ...))",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return _run_sim_impl(*args, **kwargs)

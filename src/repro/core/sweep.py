@@ -3,7 +3,7 @@
 The paper's headline results are parameter sweeps — response time vs the
 lookahead window W (Fig. 4), backlog/cost vs the Lyapunov weight V (Fig. 5),
 robustness vs mis-prediction level (Fig. 6). Running each grid point as a
-separate :func:`repro.core.simulator.run_sim` call pays Python dispatch and
+separate ``simulate(EngineSpec(engine="jax"))`` call pays Python dispatch and
 scan overhead N times. Here a sweep is a first-class object:
 
 * :class:`SweepSpec` declares the axes — V, beta, window W, scheduler, and a
@@ -14,11 +14,11 @@ scan overhead N times. Here a sweep is a first-class object:
   one ``lax.scan`` — an entire partition runs as a single compiled
   computation;
 * :class:`SweepResult` returns one :class:`SimResult` per scenario, in grid
-  order, numerically matching the per-scenario ``run_sim`` loop.
+  order, numerically matching a per-scenario ``simulate`` loop.
 
 Response-time grids have two engines behind the same API: the Python cohort
 (discrete-event) engine cannot be ``vmap``-ed — ``engine="cohort"`` runs the
-grid through :func:`run_cohort_sim` sequentially — while
+grid through the Python cohort engine sequentially — while
 ``engine="cohort-fused"`` (DESIGN.md §8) re-expresses the same semantics as
 age-tagged arrays under ``lax.scan`` and batches each (scheduler, window,
 Pallas) partition exactly like the JAX engine, mis-predicted arrival
@@ -276,7 +276,7 @@ def run_sweep(
 
     The JAX engine batches all scenarios that share (scheduler, window,
     use_pallas, events-or-not) into one vmapped ``lax.scan``; results agree
-    elementwise with a per-scenario :func:`run_sim` loop. Response-time
+    elementwise with a per-scenario ``simulate`` loop. Response-time
     grids use ``engine="cohort-fused"`` (batched the same way, DESIGN.md §8)
     or the sequential Python event loop ``engine="cohort"`` (the semantic
     oracle). Named disruption traces (``spec.events`` / the ``events`` map,
@@ -296,8 +296,10 @@ def run_sweep(
     if engine in ("cohort", "cohort-fused"):
         if mu is not None:
             raise UnsupportedEngineOption(engine, "mu")
-        if spec.sharded:
-            raise UnsupportedEngineOption(engine, "sharded", supported=("sharded",))
+        if spec.sharded and engine == "cohort":
+            # cohort-fused passes spec.sharded through to run_fused_sweep,
+            # which shards every partition's vmapped scan (DESIGN.md §13)
+            raise UnsupportedEngineOption(engine, "sharded")
         opts = dict(engine_opts or {})
         if engine == "cohort-fused":
             from .cohort_fused import run_fused_sweep

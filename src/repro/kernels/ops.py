@@ -4,6 +4,12 @@ Model code calls these through ``cfg.use_pallas``; on the CPU container they
 run in interpret mode (`REPRO_PALLAS_INTERPRET=1`, the default here), on TPU
 set it to 0 for compiled kernels. Layouts are adapted from model-native
 (B, S, H, D) to kernel-native (B, H, S, D).
+
+None of the kernels contain cross-device collectives, so under ``shard_map``
+they operate on the local shard only. The sharded cohort engine (DESIGN.md
+§13) therefore launches ``potus_slot_step`` only on single-shard meshes,
+where the per-slot decision needs no fold; multi-shard runs use the compact
+XLA step whose ``pmin``/``psum`` fold lowers outside any kernel.
 """
 from __future__ import annotations
 

@@ -32,6 +32,13 @@ dyadic tier. The engine launches this kernel only for compact schedulers
 without a disruption trace; per-slot caps fall back to the compact XLA step
 (DESIGN.md §12 lists the fallback conditions). Off-TPU it runs in interpret
 mode; parity is tested in ``tests/test_potus_slot.py``.
+
+Under the instance-sharded scan (``EngineSpec(engine="cohort-fused",
+sharded=True)``, DESIGN.md §13) the kernel runs per shard **only on a
+single-shard mesh**: a multi-shard slot step must fold its decision with
+``pmin``/``psum`` collectives, which cannot lower inside a Pallas body, so
+the engine falls back to the compact XLA step there — same semantics, one
+collective set per slot.
 """
 from __future__ import annotations
 

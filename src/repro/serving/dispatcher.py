@@ -25,6 +25,16 @@ one ``(mu, gamma, alive)`` slot of an ``EventTrace`` compiled on
 ``self.topo`` becomes a :class:`~repro.core.potus.SlotCaps`, so dead
 replicas are priced out and a dead frontend's arrivals are held, exactly as
 in the simulators.
+
+``DispatcherConfig(sharded=True)`` routes the same slot through
+:func:`~repro.core.sharded.sharded_schedule_batch` on a
+:func:`~repro.core.sharded.fleet_mesh` (DESIGN.md §7/§13): the decision
+rows shard over the instance axis, so a fleet whose (F+R)² price matrix
+outgrows one device still routes in one jitted call. The fluid assignment
+is elementwise identical to the dense path (tested at R=64 in
+``tests/test_serving_fleet.py``); only Algorithm 1 variants shard
+(``scheduler="potus"``/``"potus-loop"`` — the baselines keep the dense
+row-replicated path and raise ``ValueError``).
 """
 from __future__ import annotations
 
@@ -51,6 +61,7 @@ class DispatcherConfig:
     scheduler: str = "potus"  # "potus" | "potus-loop" | "shuffle" | "jsq"
     use_pallas: bool = False
     method: str = "sort"  # potus greedy: "sort" water-fill | "loop" reference
+    sharded: bool = False  # route via sharded_schedule_batch on a fleet_mesh
 
 
 def integral_assign(assign: np.ndarray, rng: np.random.Generator | None = None) -> np.ndarray:
@@ -127,6 +138,17 @@ class PotusDispatcher:
         self._sched = _get_scheduler(cfg.scheduler, cfg.use_pallas)
         if cfg.scheduler == "potus" and cfg.method != "sort":
             self._sched = _get_scheduler("potus-loop", cfg.use_pallas)
+        self._mesh = None
+        if cfg.sharded:
+            if cfg.scheduler not in ("potus", "potus-loop"):
+                raise ValueError(
+                    f"sharded routing implements Algorithm 1 only; scheduler "
+                    f"{cfg.scheduler!r} keeps the dense path (drop sharded=True)")
+            from repro.core.sharded import fleet_mesh
+
+            # batch axis 1: one dispatcher slot per route() call; all devices
+            # go to the instance axis that cuts the (F+R)^2 price memory
+            self._mesh = fleet_mesh(self.topo.n_instances, 1)
         self.F, self.R = F, R
         # lookahead window per frontend: predicted request counts per slot
         self.window = np.zeros((F, cfg.window + 1), np.float32)
@@ -174,23 +196,45 @@ class PotusDispatcher:
         must = np.zeros((I, C), np.float32)
         must[: self.F, 1] = self.window[:, 0] + self.pending
 
-        caps = None
-        if events_row is not None:
-            mu_row, gamma_row, alive_row = (jnp.asarray(a, jnp.float32) for a in events_row)
-            caps = caps_for_slot(mu_row, gamma_row, alive_row)
+        if self._mesh is not None:
+            from repro.core.sharded import sharded_schedule_batch
 
-        X = np.asarray(
-            self._sched(
-                self.prob,
-                self._U,
-                jnp.asarray(q_in),
-                jnp.asarray(q_out),
-                jnp.asarray(must),
-                float(self.cfg.V),
-                float(self.cfg.beta),
-                caps=caps,
+            caps_b = None
+            if events_row is not None:
+                caps_b = tuple(jnp.asarray(a, jnp.float32)[None] for a in events_row)
+            method = "sort" if self.cfg.scheduler == "potus" and self.cfg.method == "sort" else "loop"
+            X = np.asarray(
+                sharded_schedule_batch(
+                    self._mesh,
+                    self.prob,
+                    self._U,
+                    jnp.asarray(q_in)[None],
+                    jnp.asarray(q_out)[None],
+                    jnp.asarray(must)[None],
+                    float(self.cfg.V),
+                    float(self.cfg.beta),
+                    method=method,
+                    caps=caps_b,
+                )
+            )[0]
+        else:
+            caps = None
+            if events_row is not None:
+                mu_row, gamma_row, alive_row = (jnp.asarray(a, jnp.float32) for a in events_row)
+                caps = caps_for_slot(mu_row, gamma_row, alive_row)
+
+            X = np.asarray(
+                self._sched(
+                    self.prob,
+                    self._U,
+                    jnp.asarray(q_in),
+                    jnp.asarray(q_out),
+                    jnp.asarray(must),
+                    float(self.cfg.V),
+                    float(self.cfg.beta),
+                    caps=caps,
+                )
             )
-        )
         self.h_last = float(q_in.sum() + self.cfg.beta * q_out.sum())
         self.h_history.append(self.h_last)
         self.comm_cost_total += float((X * self._u_pair).sum())

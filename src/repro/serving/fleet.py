@@ -9,7 +9,7 @@ dispatcher prices (paper eq. 16). Backends come in two flavors:
   (``service_rate`` tokens/slot, the vLLM-style iteration budget) served
   oldest-request-first over at most ``max_batch`` in-flight requests. Exact
   fluid arithmetic, so a fleet of these is differentially testable against
-  the in-graph cohort oracle (``run_cohort_fused`` with the token-length
+  the in-graph cohort oracle (the cohort-fused engine with the token-length
   ``service`` axis) — the parity test in ``tests/test_serving_fleet.py``.
 * :class:`repro.serving.engine.ServingEngine` — the real model-backed
   replica (KV cache, prefill/decode); same ``submit``/``step(rate)``/

@@ -30,12 +30,12 @@ from repro.core import (
     container_costs,
     fat_tree,
     poisson_arrivals,
-    run_cohort_fused,
-    run_cohort_sim,
     run_sweep,
     spout_rate_matrix,
     t_heron_placement,
 )
+
+from helpers import run_cohort_fused, run_cohort_sim
 
 T = 240
 

@@ -6,9 +6,9 @@ import pytest
 from repro.core import (
     SimConfig,
     poisson_arrivals,
-    run_cohort_sim,
-    run_sim,
 )
+
+from helpers import run_cohort_sim, run_sim
 
 T = 400
 

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import SimConfig, poisson_arrivals, run_cohort_sim
+from repro.core import SimConfig, poisson_arrivals
 from repro.core.prediction import (
     PREDICTORS,
     all_true_negative,
@@ -10,6 +10,8 @@ from repro.core.prediction import (
     mse,
     predict_series,
 )
+
+from helpers import run_cohort_sim
 
 
 @pytest.fixture(scope="module")

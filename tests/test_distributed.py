@@ -1,5 +1,6 @@
-"""Multi-device integration: sharded train step, shard_map EP MoE, and
-elastic checkpoint restore across mesh shapes.
+"""Multi-device integration: sharded train step, shard_map EP MoE, elastic
+checkpoint restore across mesh shapes, and the instance-sharded cohort
+engine's 4-shard differential (DESIGN.md §13).
 
 jax locks the device count at first init, so multi-device cases run in a
 subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (tests
@@ -15,12 +16,13 @@ import pytest
 SRC = "src"
 
 
-def _run(code: str) -> dict:
+def _run(code: str, device_count: int = 8) -> dict:
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": SRC, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        env={"PYTHONPATH": SRC,
+             "XLA_FLAGS": f"--xla_force_host_platform_device_count={device_count}",
              "JAX_PLATFORMS": "cpu",  # skip the ~7-min TPU-init probe on TPU-lib images
              "PATH": "/usr/bin:/bin"},
         cwd=".",
@@ -134,3 +136,76 @@ def test_elastic_checkpoint_restore_across_meshes(tmp_path):
     """)
     assert out["d"] == 0.0, out
     assert "4" in out["resharded"], out
+
+
+@pytest.mark.slow
+def test_sharded_cohort_multidevice_differential():
+    """4-shard `EngineSpec(engine="cohort-fused", sharded=True)` == dense,
+    bitwise on the dyadic tier (DESIGN.md §13): potus/shuffle/jsq, with and
+    without a disruption trace, plus chunked-vs-monolithic sharded scans."""
+    out = _run("""
+        import json
+        import numpy as np
+        import jax
+        from repro.core import (Component, EngineSpec, build_topology,
+                                container_costs, fat_tree, rolling_restart,
+                                simulate, spout_rate_matrix,
+                                t_heron_placement)
+
+        assert jax.device_count() == 4
+        T = 30
+        apps = [
+            [Component("src", 0, True, 2, successors=(1,)),
+             Component("mid", 0, False, 4, 4.0, successors=(2,)),
+             Component("sink", 0, False, 2, 4.0)],
+            [Component("src", 1, True, 2, successors=(1, 2), selectivity=(0.5, 0.5)),
+             Component("a", 1, False, 2, 4.0, successors=(3,)),
+             Component("b", 1, False, 2, 4.0, successors=(3,)),
+             Component("sink", 1, False, 2, 8.0)],
+        ]
+        topo = build_topology(apps, gamma=64.0)
+        assert topo.n_instances % 4 == 0
+        sd, _ = fat_tree(4)
+        net = container_costs("fat-tree", sd)
+        rates = np.ones((topo.n_instances, topo.n_components))
+        placement = t_heron_placement(topo, net, rates, max_per_container=4)
+        rng = np.random.default_rng(11)
+        unit = spout_rate_matrix(topo, 1.0)
+        arr = (2.0 ** rng.integers(-1, 2, size=(T + 1, *unit.shape))).astype(np.float32)
+        arr *= rng.random((T + 1, *unit.shape)) < 0.8
+        arr = (arr * (unit > 0)).astype(np.float32)
+        trace = rolling_restart(topo, start=8, down_slots=2,
+                                instances=[1, 5, 9]).compile(topo, T, placement)
+
+        def eq(a, b):
+            return bool(np.array_equal(np.asarray(a), np.asarray(b),
+                                       equal_nan=True))
+
+        checks = {}
+        for sched in ("potus", "shuffle", "jsq"):
+            for tag, events in (("", None), ("+events", trace)):
+                kw = dict(topo=topo, net=net, placement=placement,
+                          arrivals=arr, T=T, engine="cohort-fused",
+                          scheduler=sched, V=2.0, warmup=5, age_cap=32,
+                          events=events)
+                dense = simulate(EngineSpec(**kw))
+                shard = simulate(EngineSpec(**kw, sharded=True))
+                checks[sched + tag] = (
+                    eq(dense.backlog, shard.backlog)
+                    and eq(dense.comm_cost, shard.comm_cost)
+                    and eq(dense.avg_response, shard.avg_response)
+                    and float(dense.completed_mass) == float(shard.completed_mass)
+                )
+        kw = dict(topo=topo, net=net, placement=placement, arrivals=arr, T=T,
+                  engine="cohort-fused", scheduler="potus", V=2.0, warmup=5,
+                  age_cap=32, sharded=True)
+        mono = simulate(EngineSpec(**kw))
+        for chunk in (7, 15):
+            ch = simulate(EngineSpec(**kw, chunk=chunk))
+            checks[f"chunk{chunk}"] = (eq(mono.backlog, ch.backlog)
+                                       and eq(mono.avg_response, ch.avg_response))
+        pall = simulate(EngineSpec(**kw, use_pallas=True))
+        checks["pallas_fallback"] = eq(mono.backlog, pall.backlog)
+        print(json.dumps(checks))
+    """, device_count=4)
+    assert all(out.values()), out

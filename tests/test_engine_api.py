@@ -2,10 +2,12 @@
 
 Two contracts:
 
-* **Bitwise parity** — a spec routes to the same engine implementation the
-  legacy entry point wraps, so on the dyadic tier (pow-of-two arrivals,
-  pow-of-two parallelism/selectivity) every result field matches the legacy
-  call exactly, and the legacy call itself now warns :class:`DeprecationWarning`.
+* **Bitwise parity** — a spec routes to the one engine implementation
+  (``_run_sim_impl`` / ``_run_cohort_sim_impl`` / ``_run_cohort_fused_impl``),
+  so on the dyadic tier (pow-of-two arrivals, pow-of-two
+  parallelism/selectivity) every result field matches a direct impl call
+  exactly. The ``DeprecationWarning`` shims that used to wrap the impls were
+  removed one release after the facade landed.
 * **One error shape** — every engine×option pair either runs or raises
   :class:`UnsupportedEngineOption` naming the option, the engine, and the
   nearest engine that supports it, exactly per ``OPTION_SUPPORT``.
@@ -24,15 +26,14 @@ from repro.core import (
     build_topology,
     container_costs,
     fat_tree,
-    run_cohort_fused,
-    run_cohort_sim,
-    run_sim,
     run_sweep,
     simulate,
     spout_rate_matrix,
     t_heron_placement,
 )
-from repro.core.simulator import materialize_arrivals
+from repro.core.cohort import _run_cohort_sim_impl
+from repro.core.cohort_fused import _run_cohort_fused_impl
+from repro.core.simulator import _run_sim_impl, materialize_arrivals
 
 T = 30
 W = 1
@@ -50,6 +51,7 @@ _SET_VALUES = {
     "service": 1.0,
     "age_cap": 32,
     "slots_per_launch": 4,
+    "sharded": True,
 }
 
 
@@ -90,40 +92,37 @@ def _spec(system, **kw):
 
 
 class TestFacadeParity:
-    """simulate(EngineSpec) == legacy entry point, bitwise (dyadic tier)."""
+    """simulate(EngineSpec) == direct impl call, bitwise (dyadic tier)."""
 
-    def test_jax_engine_matches_run_sim(self, system):
+    def test_jax_engine_matches_impl(self, system):
         topo, net, placement, arr = system
         res = simulate(_spec(system, engine="jax"))
-        with pytest.warns(DeprecationWarning, match="run_sim"):
-            ref = run_sim(topo, net, placement, arr, T,
-                          SimConfig(V=2.0, window=W))
+        ref = _run_sim_impl(topo, net, placement, arr, T,
+                            SimConfig(V=2.0, window=W))
         np.testing.assert_array_equal(np.asarray(res.backlog), np.asarray(ref.backlog))
         np.testing.assert_array_equal(np.asarray(res.comm_cost), np.asarray(ref.comm_cost))
         assert res.avg_backlog == ref.avg_backlog
         assert res.avg_cost == ref.avg_cost
 
-    def test_cohort_engine_matches_run_cohort_sim(self, system):
+    def test_cohort_engine_matches_impl(self, system):
         topo, net, placement, arr = system
         res = simulate(_spec(system, engine="cohort", warmup=5, drain_margin=10))
-        with pytest.warns(DeprecationWarning, match="run_cohort_sim"):
-            ref = run_cohort_sim(topo, net, placement, arr, None, T,
-                                 SimConfig(V=2.0, window=W), warmup=5,
-                                 drain_margin=10)
+        ref = _run_cohort_sim_impl(topo, net, placement, arr, None, T,
+                                   SimConfig(V=2.0, window=W), warmup=5,
+                                   drain_margin=10)
         assert res.n_cohorts == ref.n_cohorts > 0
         np.testing.assert_array_equal(res.backlog, ref.backlog)
         np.testing.assert_array_equal(res.comm_cost, ref.comm_cost)
         assert res.avg_response == ref.avg_response
         assert res.n_cohorts == ref.n_cohorts
 
-    def test_fused_engine_matches_run_cohort_fused(self, system):
+    def test_fused_engine_matches_impl(self, system):
         topo, net, placement, arr = system
         res = simulate(_spec(system, engine="cohort-fused", warmup=5,
                              drain_margin=10, age_cap=32))
-        with pytest.warns(DeprecationWarning, match="run_cohort_fused"):
-            ref = run_cohort_fused(topo, net, placement, arr, None, T,
-                                   SimConfig(V=2.0, window=W), warmup=5,
-                                   drain_margin=10, age_cap=32)
+        ref = _run_cohort_fused_impl(topo, net, placement, arr, None, T,
+                                     SimConfig(V=2.0, window=W), warmup=5,
+                                     drain_margin=10, age_cap=32)
         np.testing.assert_array_equal(np.asarray(res.backlog), np.asarray(ref.backlog))
         np.testing.assert_array_equal(np.asarray(res.comm_cost), np.asarray(ref.comm_cost))
         assert res.avg_response == ref.avg_response

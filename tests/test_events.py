@@ -41,15 +41,14 @@ from repro.core import (
     potus_schedule,
     random_chaos,
     rolling_restart,
-    run_cohort_fused,
-    run_cohort_sim,
-    run_sim,
     run_sim_sharded,
     run_sweep,
     shuffle_schedule,
     spout_rate_matrix,
     t_heron_placement,
 )
+
+from helpers import run_cohort_fused, run_cohort_sim, run_sim
 
 T = 100
 

@@ -33,10 +33,11 @@ from repro.core import (
     fat_tree,
     linear_app,
     run_event_sim,
-    run_sim,
     spout_rate_matrix,
     t_heron_placement,
 )
+
+from helpers import run_sim
 
 
 def _dyadic_system(gamma=64.0):

@@ -18,13 +18,14 @@ from repro.core import (
     poisson_arrivals,
     potus_schedule,
     random_apps,
-    run_sim,
     run_sweep,
     sharded_schedule,
     t_heron_placement,
 )
 from repro.core.potus import SchedProblem
 from repro.core.reference import potus_schedule_reference
+
+from helpers import run_sim
 
 
 def _random_system(seed: int, n_apps: int = 3):
@@ -195,9 +196,9 @@ class TestShardedPath:
         code = textwrap.dedent("""
             import json
             import numpy as np
-            from repro.core import (SimConfig, build_topology, container_costs,
+            from repro.core import (EngineSpec, build_topology, container_costs,
                                     fat_tree, feasible_rates, instance_mesh,
-                                    linear_app, poisson_arrivals, run_sim,
+                                    linear_app, poisson_arrivals, simulate,
                                     t_heron_placement)
 
             topo = build_topology([linear_app(4, parallelism=4, mu=4.0),
@@ -209,9 +210,10 @@ class TestShardedPath:
             mesh = instance_mesh(topo.n_instances)
             T = 40
             arr = poisson_arrivals(np.random.default_rng(7), rates, T + 10)
-            dense = run_sim(topo, net, placement, arr, T, SimConfig(V=2.0, window=2))
-            shard = run_sim(topo, net, placement, arr, T,
-                            SimConfig(V=2.0, window=2, sharded=True))
+            kw = dict(topo=topo, net=net, placement=placement, arrivals=arr,
+                      T=T, V=2.0, window=2)
+            dense = simulate(EngineSpec(engine="jax", **kw))
+            shard = simulate(EngineSpec(engine="sharded", **kw))
             print(json.dumps(dict(
                 n_shards=int(mesh.shape["i"]),
                 dbacklog=float(np.abs(dense.backlog - shard.backlog).max()),

@@ -16,11 +16,12 @@ from repro.core import (
     poisson_arrivals,
     potus_schedule,
     random_apps,
-    run_sim,
     t_heron_placement,
 )
 from repro.core.reference import potus_schedule_reference
 from repro.roofline.hlo_cost import _shape_elems_bytes, analyze_hlo
+
+from helpers import run_sim
 
 
 class TestFastPathProperties:

@@ -20,11 +20,13 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.core import SimConfig, run_cohort_fused
+from repro.core import SimConfig
 from repro.core.events import FleetEvent, FleetScenario, flash_straggler
 from repro.serving.dispatcher import DispatcherConfig, PotusDispatcher, integral_assign
 from repro.serving.engine import ServiceCredit
 from repro.serving.fleet import FleetRequest, ReplicaFleet, SimReplica
+
+from helpers import run_cohort_fused
 
 TPR = 4.0  # tokens per request (the service-time axis; power of two)
 RATES_TOK = np.array([8.0, 8.0, 4.0, 4.0], np.float32)  # replica tokens/slot
@@ -278,6 +280,57 @@ def test_fleet_mesh_batch_schedule_matches_dense():
     for b in range(B):
         Xd = potus_schedule(disp.prob, U, q_in[b], q_out[b], must[b], 0.5, 1.0)
         np.testing.assert_array_equal(Xb[b], np.asarray(Xd))
+
+
+def test_sharded_dispatcher_matches_dense_r64():
+    """DispatcherConfig(sharded=True) routes through sharded_schedule_batch
+    on the fleet mesh; the fluid (F, R) assignment is elementwise identical
+    to the dense route at R=64, with and without a disruption slot
+    (DESIGN.md §13)."""
+    rng = np.random.default_rng(7)
+    F, R, H = 4, 64, 8
+    replica_hosts = rng.integers(0, H, R)
+    frontend_hosts = rng.integers(0, H, F)
+    host_costs = rng.integers(0, 4, (H, H)).astype(np.float32)
+    host_costs = (host_costs + host_costs.T)
+    np.fill_diagonal(host_costs, 0)
+    rates = (2.0 ** rng.integers(0, 3, R)).astype(np.float32)
+
+    def build(sharded):
+        return PotusDispatcher(
+            n_frontends=F, replica_hosts=replica_hosts,
+            frontend_hosts=frontend_hosts, host_costs=host_costs,
+            replica_rates=rates,
+            cfg=DispatcherConfig(V=2.0, window=1, sharded=sharded),
+        )
+
+    dense, shard = build(False), build(True)
+    trace = flash_straggler(dense.topo, start=2, duration=4, factor=0.25,
+                            instance=F + 3).compile(dense.topo, 8)
+    backlog = np.zeros(R, np.float32)
+    arr_rng = np.random.default_rng(13)
+    for t in range(8):
+        arr = (2.0 ** arr_rng.integers(0, 3, F)).astype(np.float32)
+        ev = ((trace.mu_t[t], trace.gamma_t[t], trace.alive_t[t])
+              if t % 2 else None)
+        a_d = dense.route(arr, backlog, events_row=ev)
+        a_s = shard.route(arr, backlog, events_row=ev)
+        np.testing.assert_array_equal(a_d, a_s)
+        backlog = np.maximum(backlog + a_d.sum(axis=0) - rates, 0)
+    assert dense.comm_cost_total == shard.comm_cost_total
+    assert dense.h_history == shard.h_history
+
+
+def test_sharded_dispatcher_rejects_baselines():
+    """Only Algorithm 1 variants shard; baselines raise up front."""
+    with pytest.raises(ValueError, match="Algorithm 1"):
+        PotusDispatcher(
+            n_frontends=1, replica_hosts=np.array([1]),
+            frontend_hosts=np.array([0]),
+            host_costs=np.zeros((2, 2), np.float32),
+            replica_rates=np.array([4.0], np.float32),
+            cfg=DispatcherConfig(scheduler="jsq", sharded=True),
+        )
 
 
 _MESH_SCRIPT = textwrap.dedent("""

@@ -23,12 +23,12 @@ from repro.core import (
     diamond_app,
     fat_tree,
     linear_app,
-    run_cohort_fused,
-    run_sim,
     run_sweep,
     spout_rate_matrix,
     t_heron_placement,
 )
+
+from helpers import run_cohort_fused, run_sim
 
 
 @pytest.fixture(scope="module")

@@ -8,11 +8,11 @@ from repro.core import (
     SimConfig,
     SweepSpec,
     poisson_arrivals,
-    run_cohort_sim,
-    run_sim,
     run_sweep,
     trace_synthetic,
 )
+
+from helpers import run_cohort_sim, run_sim
 
 T = 60
 
