@@ -90,6 +90,43 @@ def _degradation(transient, sched: str, W: int) -> float:
     return float(hurt - base)
 
 
+def _dump_obs(sys, T, t0, dur, scen, W) -> None:
+    """Metrics-on POTUS run through the same transient (DESIGN.md §14).
+
+    Re-runs the kfail scenario with every cohort-fused stream enabled and
+    span tracing on, then dumps ``OBS_disruption.json`` (``repro-obs/v1``)
+    and ``TRACE_disruption.json`` (Chrome-trace / Perfetto).  The recovery
+    story in BENCH_disruption — peak-backlog slot, recovery slot — is
+    re-derivable from the streams alone via
+    ``python tools/obs_report.py OBS_disruption.json --recovery``.
+    """
+    import os
+
+    from repro.obs.trace import disable_tracing, enable_tracing, export_chrome_trace
+
+    obs_path = os.environ.get("REPRO_OBS_DISRUPTION_JSON", "OBS_disruption.json")
+    trace_path = os.environ.get("REPRO_OBS_TRACE_JSON", "TRACE_disruption.json")
+    arr = arrivals_for(sys, "poisson", T)
+    spec = SweepSpec(V=1.0, window=(W,), scheduler=("potus",), events=("kfail",))
+    age_cap = max(4 * dur, 48)
+    warm = max(t0 - 1, 1)
+    margin = T - min(t0 + dur + 10, T - 1)
+    streams = ("backlog", "queue_depth", "price", "dispatch", "transit",
+               "backlog_comp", "held", "window", "saturation", "payload")
+    tracer = enable_tracing()
+    tracer.clear()
+    try:
+        swept = run_sweep(sys.topo, sys.net, sys.placement, arr, T, spec,
+                          engine="cohort-fused", events={"kfail": scen},
+                          engine_opts={"age_cap": age_cap, "warmup": warm,
+                                       "drain_margin": margin,
+                                       "metrics": streams})
+    finally:
+        disable_tracing()
+    swept.result(scheduler="potus", window=W, events="kfail").metrics.save(obs_path)
+    export_chrome_trace(trace_path)
+
+
 def disruption_bench() -> list[Row]:
     """Bench rows + BENCH_disruption.json through the failure transient."""
     sys, T, t0, dur, scen, Ws, transient, wall = _transient_grid()
@@ -122,6 +159,7 @@ def disruption_bench() -> list[Row]:
                 recovery_slots=rec,
                 saturated_frac=round(float(tr.saturated_frac), 4),
             ))
+    _dump_obs(sys, T, t0, dur, scen, max(Ws))
     return rows
 
 

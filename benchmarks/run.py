@@ -6,10 +6,14 @@ machine-readable JSON under one shared schema (``benchmarks/common.py``) to
 (override the paths with REPRO_BENCH_COHORT_JSON / REPRO_BENCH_DISRUPTION_JSON
 / REPRO_BENCH_SERVING_JSON) so the perf trajectory is tracked across PRs.
 
-Set REPRO_BENCH_FULL=1 for the full (paper-scale) sweeps.
+Set REPRO_BENCH_FULL=1 for the full (paper-scale) sweeps. ``--profile DIR``
+wraps the run in span tracing (``repro.obs.trace``) plus ``jax.profiler``,
+writing a Perfetto-loadable ``chrome_trace.json`` (and the XLA profile) to
+DIR (DESIGN.md §14).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -35,7 +39,27 @@ def main() -> None:
         ("dispatcher", systems_bench.dispatcher_bench),
         ("serving_fleet", serving_fleet.serving_fleet_bench),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description="benchmark driver")
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on section names")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="write span + jax.profiler traces to DIR (DESIGN.md §14)")
+    args = ap.parse_args()
+    only = args.only
+
+    profile_ctx = None
+    if args.profile:
+        import os
+
+        import jax
+
+        from repro.obs.trace import enable_tracing, export_chrome_trace
+
+        os.makedirs(args.profile, exist_ok=True)
+        enable_tracing()
+        profile_ctx = jax.profiler.trace(args.profile)
+        profile_ctx.__enter__()
+
     print("name,us_per_call,derived")
     t0 = time.time()
     for name, fn in sections:
@@ -55,6 +79,15 @@ def main() -> None:
                      serving_fleet.SERVING_BENCH)
     write_bench_json("BENCH_workload.json", "REPRO_BENCH_WORKLOAD_JSON",
                      workload.WORKLOAD_BENCH)
+
+    if profile_ctx is not None:
+        import os
+
+        profile_ctx.__exit__(None, None, None)
+        out = os.path.join(args.profile, "chrome_trace.json")
+        export_chrome_trace(out)
+        print(f"# profile: spans -> {out}; XLA profile -> {args.profile}",
+              file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

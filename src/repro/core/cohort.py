@@ -45,6 +45,9 @@ from collections import defaultdict, deque
 
 import numpy as np
 
+from repro.obs.metrics import MetricsFrame, build_frame, compute_host_streams, scan_stream_names
+from repro.obs.trace import span as obs_span
+
 from .network import NetworkCosts
 from .potus import make_problem
 from .simulator import SimConfig, _get_scheduler
@@ -71,6 +74,8 @@ class CohortResult:
     # included, phantoms included) — the conservation ledger the disruption
     # property tests check against injected mass (DESIGN.md §9)
     completed_mass: float = 0.0
+    # selected per-slot obs streams, or None when metrics were off (DESIGN.md §14)
+    metrics: MetricsFrame | None = None
 
 
 class _Fifo:
@@ -123,6 +128,7 @@ def _run_cohort_sim_impl(
     warmup: int = 50,
     drain_margin: int | None = None,
     events=None,  # EventTrace | None — disruption trace (core.events, DESIGN.md §9)
+    metrics=None,  # MetricsSpec | None — selected obs streams (DESIGN.md §14)
 ) -> CohortResult:
     import jax.numpy as jnp
 
@@ -175,6 +181,9 @@ def _run_cohort_sim_impl(
     cost_ts = np.zeros(T)
     completed_mass = 0.0
     U_dev = jnp.asarray(U)  # hoisted: one host->device transfer, not one per slot
+    met_names = () if metrics is None else scan_stream_names(metrics)
+    met_rows: list[tuple] = []
+    u_colmean = U.mean(axis=0)[inst_container]  # (I,) mean transfer cost per column
 
     target_split_cache: dict[int, np.ndarray] = {
         c: topo.instances_of(c) for c in range(C)
@@ -182,6 +191,7 @@ def _run_cohort_sim_impl(
 
     for t in range(T):
         # -- 1. reconcile window pos-0 with actual arrivals of slot t ---------
+        tp_t = fp_t = tn_t = drop_t = 0.0
         for (i, c2) in spout_streams:
             pred_total = predicted[t, i, c2] if t < predicted.shape[0] else 0.0
             act = actual[t, i, c2] if t < actual.shape[0] else 0.0
@@ -192,6 +202,10 @@ def _run_cohort_sim_impl(
             r = unt / pred_total if pred_total > 0 else 0.0
             window_unt[(i, c2)][0] = r * tp + tn  # drop unserved phantoms
             weights[(c2, t)] += act
+            tp_t += tp
+            fp_t += fp
+            tn_t += tn
+            drop_t += r * fp  # phantom remainder retired by reconciliation
 
         # -- 2. gather queue state, schedule ----------------------------------
         q_in_arr = np.zeros(I, np.float32)
@@ -211,10 +225,11 @@ def _run_cohort_sim_impl(
             caps = SlotCaps(alive=alive_row, row_alive=alive_row,
                             mu=jnp.asarray(trace.mu_t[t]),
                             gamma=jnp.asarray(trace.gamma_t[t]))
-        X = np.asarray(
-            sched(prob, U_dev, jnp.asarray(q_in_arr), jnp.asarray(q_out_arr),
-                  jnp.asarray(must_send), float(cfg.V), float(cfg.beta), caps=caps)
-        )
+        with obs_span("potus/cohort/scheduler-call", t=t):
+            X = np.asarray(
+                sched(prob, U_dev, jnp.asarray(q_in_arr), jnp.asarray(q_out_arr),
+                      jnp.asarray(must_send), float(cfg.V), float(cfg.beta), caps=caps)
+            )
         backlog_ts[t] = q_in_arr.sum() + cfg.beta * q_out_arr.sum()
         cost_ts[t] = float((X * u_pair).sum())
 
@@ -305,6 +320,28 @@ def _run_cohort_sim_impl(
             nxt = t + W + 1
             w_arr[-1] = predicted[nxt, i, c2] if nxt < predicted.shape[0] else 0.0
 
+        # -- 6. per-slot metric rows (DESIGN.md §14) ---------------------------
+        if metrics is not None:
+            landed = np.zeros(I, np.float32)
+            for j, _key, mass in transit:
+                landed[j] += mass
+            comp_backlog = np.zeros(C)
+            np.add.at(comp_backlog, inst_comp, q_in_arr)
+            ctx = {
+                "h": backlog_ts[t],
+                "q_in": q_in_arr,
+                "price": cfg.V * u_colmean + q_in_arr,
+                "landed": landed,
+                "transit_total": landed.sum(),
+                "comp_backlog": comp_backlog,
+                "held": sum(admit_backlog.values()),
+                "dropped": drop_t,
+                "tp": tp_t,
+                "fp": fp_t,
+                "tn": tn_t,
+            }
+            met_rows.append(compute_host_streams(met_names, ctx))
+
     # --- aggregate response times ---------------------------------------------
     horizon = T - (drain_margin if drain_margin is not None else max(2 * W + 20, 40))
     resp_list, wts = [], []
@@ -327,6 +364,10 @@ def _run_cohort_sim_impl(
     else:
         avg, p95 = float("nan"), float("nan")
     measured = [k for k in weights if warmup <= k[1] < horizon and weights[k] > 0]
+    frame = None
+    if metrics is not None:
+        cols = [np.stack([row[k] for row in met_rows]) for k in range(len(met_names))]
+        frame = build_frame(metrics, cols, n_slots=T, payload_floats=0.0)
     return CohortResult(
         avg_response=avg,
         p95_response=p95,
@@ -337,4 +378,5 @@ def _run_cohort_sim_impl(
         n_cohorts=len(measured),
         completed_frac=(n_done / max(len(measured), 1)),
         completed_mass=completed_mass,
+        metrics=frame,
     )

@@ -67,12 +67,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.context import shard_map_compat
 from repro.distributed.sharding import named
+from repro.obs.metrics import build_frame, compute_scan_streams, scan_stream_names
+from repro.obs.trace import span as obs_span
 
 from .cohort import CohortResult
 from .compact import COMPACT_SCHEDULERS, StepConsts, compact_slot_step
 from .network import NetworkCosts
 from .potus import caps_for_slot, make_problem
-from .sharded import COHORT_AXIS, cohort_state_specs, instance_mesh
+from .sharded import (
+    COHORT_AXIS,
+    cohort_slot_payload_floats,
+    cohort_state_specs,
+    instance_mesh,
+)
 from .simulator import (
     SimConfig,
     _get_scheduler,
@@ -98,10 +105,15 @@ class AgeCapSaturationWarning(UserWarning):
     biased low (DESIGN.md §8). Re-run with the suggested deeper cap."""
 
 
-def _maybe_warn_saturation(saturated_frac: float, age_cap: int) -> None:
+def _maybe_warn_saturation(saturated_frac: float, age_cap: int,
+                           label: str | None = None) -> None:
+    """``label`` names the run (scenario / sweep partition) in the warning —
+    without it a sweep emitting several of these gave no way to tell *which*
+    grid point saturated."""
     if saturated_frac > SATURATION_WARN_FRAC:
+        where = f" [{label}]" if label else ""
         warnings.warn(
-            f"{saturated_frac:.1%} of terminal completions hit the "
+            f"{saturated_frac:.1%} of terminal completions{where} hit the "
             f"age_cap={age_cap} saturation bucket: response times are "
             f"silently truncated (biased low). Re-run with a deeper cap, "
             f"e.g. age_cap={2 * age_cap}.",
@@ -222,8 +234,9 @@ def _fused_step(
     use_pallas: bool,
     V: jax.Array,
     beta: jax.Array,
-    state,
-    xs,
+    state=None,
+    xs=None,
+    metrics_spec=None,
 ):
     """One slot of the cohort dynamics (mirrors ``core.cohort`` step order).
 
@@ -355,7 +368,24 @@ def _fused_step(
         return jnp.concatenate([head, x[..., 2:], jnp.zeros_like(x[..., 0:1])], axis=-1)
 
     state = (q_rem, admit, shift(q_in_tag), shift(q_out_tag), shift(land), resp_mass, resp_time)
-    return state, (backlog, cost, capped_served, term_served)
+    out = (backlog, cost, capped_served, term_served)
+    if metrics_spec is not None:
+        # §14 metric streams as extra scan outputs (dense reference path)
+        landed = land.sum(-1)
+        ctx = {
+            "h": backlog,
+            "q_in": q_in_arr,
+            "price": V * U.mean(axis=0)[prob.inst_container] + q_in_arr,
+            "landed": landed,
+            "transit_total": landed.sum(),
+            "comp_backlog": comp_onehot.T @ q_in_arr,
+            "held": admit.sum(),
+            "dropped": (r * (pred_m - tp)).sum(),
+            "tp": tp.sum(), "fp": (pred_m - tp).sum(), "tn": tn.sum(),
+            "capped": capped_served, "served": term_served,
+        }
+        out = out + compute_scan_streams(scan_stream_names(metrics_spec), ctx)
+    return state, out
 
 
 def _kernel_launches(consts, state, actual, pred, nxt, scheduler, age_cap,
@@ -416,7 +446,7 @@ def _step_consts(prob, comp_onehot, U, mu, inv_service, sel_cmp, stream_cmp,
 
 @partial(jax.jit, static_argnames=("edges", "scheduler", "use_pallas", "age_cap",
                                    "n_components", "shared_inputs", "events_shared",
-                                   "slots_per_launch"),
+                                   "slots_per_launch", "metrics_spec"),
          donate_argnames=("states",))
 def _scan_cohort_fused(
     prob,
@@ -444,6 +474,7 @@ def _scan_cohort_fused(
     shared_inputs: bool = False,
     events_shared: bool = False,
     slots_per_launch: int = 1,
+    metrics_spec=None,  # static MetricsSpec | None (DESIGN.md §14)
 ):
     """Scan one chunk of slots for every scenario in the batch.
 
@@ -465,8 +496,11 @@ def _scan_cohort_fused(
     """
     comp_onehot = jax.nn.one_hot(prob.inst_comp, n_components, dtype=mu.dtype)
     compact = scheduler in COMPACT_SCHEDULERS
+    # metrics never ride the kernel path: stream reductions (sorts) cannot
+    # lower into the Pallas slot kernel, so metrics-on falls back to the
+    # compact XLA step (metrics=None keeps the kernel — zero-cost-when-off)
     kernel_path = (compact and use_pallas and scheduler == "potus"
-                   and events_s is None)
+                   and events_s is None and metrics_spec is None)
     if not compact:
         sched = _get_scheduler(scheduler, use_pallas)
         u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
@@ -483,18 +517,19 @@ def _scan_cohort_fused(
         if compact:
             def step(st, x):
                 return compact_slot_step(consts, st, x, scheduler=scheduler,
-                                         age_cap=age_cap)
+                                         age_cap=age_cap,
+                                         metrics_spec=metrics_spec)
         else:
             step = partial(
                 _fused_step, prob, sched, edges, U, u_pair, mu, inv_service,
                 sel_cmp, stream_cmp, valid_cmp, succ_map, term_f, comp_onehot,
-                age_cap, use_pallas, V, beta,
+                age_cap, use_pallas, V, beta, metrics_spec=metrics_spec,
             )
         xs = (actual, pred, nxt, jnp.arange(T))
         if ev is not None:
             xs = xs + (ev,)
-        final, (backlog, cost, capped, served) = jax.lax.scan(step, state, xs)
-        return final, (backlog, cost, capped.sum(), served.sum())
+        final, ys = jax.lax.scan(step, state, xs)
+        return final, (ys[0], ys[1], ys[2].sum(), ys[3].sum()) + tuple(ys[4:])
 
     ev_ax = None if (events_s is None or events_shared) else 0
     in_axes = (0,) + ((None, None, None) if shared_inputs else (0, 0, 0)) + (0, 0, ev_ax)
@@ -505,7 +540,7 @@ def _scan_cohort_fused(
 
 @partial(jax.jit, static_argnames=("mesh", "scheduler", "use_pallas", "age_cap",
                                    "n_components", "shared_inputs", "events_shared",
-                                   "slots_per_launch"),
+                                   "slots_per_launch", "metrics_spec"),
          donate_argnames=("states",))
 def _scan_cohort_sharded(
     mesh,
@@ -533,6 +568,7 @@ def _scan_cohort_sharded(
     shared_inputs: bool = False,
     events_shared: bool = False,
     slots_per_launch: int = 1,
+    metrics_spec=None,  # static MetricsSpec | None (DESIGN.md §14)
 ):
     """:func:`_scan_cohort_fused` over an instance mesh (DESIGN.md §13).
 
@@ -562,7 +598,7 @@ def _scan_cohort_sharded(
         )
     n_shards = mesh.shape[COHORT_AXIS]
     kernel_path = (use_pallas and scheduler == "potus" and events_s is None
-                   and n_shards == 1)
+                   and n_shards == 1 and metrics_spec is None)
 
     def local(prob_l, states_l, U, mu, inv_service, sel_cmp, stream_cmp,
               valid_cmp, succ_map, term_f, adj_rows, actual_l, pred_l, nxt_l,
@@ -582,13 +618,14 @@ def _scan_cohort_sharded(
             def step(st, x):
                 return compact_slot_step(consts, st, x, scheduler=scheduler,
                                          age_cap=age_cap, axis=COHORT_AXIS,
-                                         n_shards=n_shards)
+                                         n_shards=n_shards,
+                                         metrics_spec=metrics_spec)
 
             xs = (actual, pred, nxt, jnp.arange(T))
             if ev_one is not None:
                 xs = xs + (ev_one,)
-            final, (backlog, cost, capped, served) = jax.lax.scan(step, state, xs)
-            return final, (backlog, cost, capped.sum(), served.sum())
+            final, ys = jax.lax.scan(step, state, xs)
+            return final, (ys[0], ys[1], ys[2].sum(), ys[3].sum()) + tuple(ys[4:])
 
         ev_ax = None if (ev is None or events_shared) else 0
         in_axes = ((0,) + ((None, None, None) if shared_inputs else (0, 0, 0))
@@ -609,7 +646,9 @@ def _scan_cohort_sharded(
     ev_args = () if events_s is None else (events_s,)
     # replicated metrics out (values are psummed inside the step, so every
     # shard holds the global series; check_rep=False skips the proof)
-    met_specs = (P(None, None), P(None, None), P(None), P(None))
+    n_streams = 0 if metrics_spec is None else len(scan_stream_names(metrics_spec))
+    met_specs = (P(None, None), P(None, None), P(None), P(None)) + (
+        (P(None, None, None),) * n_streams)  # (S, T, w) stream slabs, replicated
     return shard_map_compat(
         local,
         mesh=mesh,
@@ -772,6 +811,7 @@ def _run_chunked_cohort(
     chunk: int | None,
     slots_per_launch: int = 1,
     mesh=None,  # instance mesh -> _scan_cohort_sharded (DESIGN.md §13)
+    metrics_spec=None,  # static MetricsSpec | None (DESIGN.md §14)
 ):
     """Stream the fused scan ``chunk`` slots at a time (DESIGN.md §11.2).
 
@@ -786,8 +826,11 @@ def _run_chunked_cohort(
     identically for any chunk length); only the response sums re-associate,
     which is exact on dyadic-arithmetic systems.
 
-    Returns numpy ``(resp_mass, resp_time, backlog, cost, capped, served)``,
-    each with a leading scenario axis; resp_* are (S, C, T + W + 1).
+    Returns numpy ``(resp_mass, resp_time, backlog, cost, capped, served,
+    streams)``, each with a leading scenario axis; resp_* are
+    (S, C, T + W + 1) and ``streams`` is a list of (S, T, w) metric-stream
+    slabs (empty when ``metrics_spec`` is None) — per-slot rows concatenate
+    bitwise across chunk boundaries exactly like backlog/cost.
     """
     Sn = len(Vs)
     q0_b = np.broadcast_to(q0, (Sn,) + q0.shape) if shared else q0
@@ -814,6 +857,8 @@ def _run_chunked_cohort(
     costs: list[np.ndarray] = []
     capped_tot = np.zeros(Sn, np.float64)
     served_tot = np.zeros(Sn, np.float64)
+    n_streams = 0 if metrics_spec is None else len(scan_stream_names(metrics_spec))
+    stream_chunks: list[list[np.ndarray]] = [[] for _ in range(n_streams)]
 
     tc = T if chunk is None else int(chunk)
     for t0 in range(0, T, tc) or [0]:
@@ -840,14 +885,19 @@ def _run_chunked_cohort(
             n_components=n_components,
             shared_inputs=shared,
             slots_per_launch=slots_per_launch,
+            metrics_spec=metrics_spec,
             **dev,
         )
-        if mesh is None:
-            states, (h, cost, capped, served) = _scan_cohort_fused(
-                prob, states, edges=cpt.edges, **kwargs)
-        else:
-            states, (h, cost, capped, served) = _scan_cohort_sharded(
-                mesh, prob, states, **kwargs)
+        with obs_span("potus/cohort-fused/chunk", t0=t0, t1=t1,
+                      sharded=mesh is not None):
+            if mesh is None:
+                states, ys = _scan_cohort_fused(
+                    prob, states, edges=cpt.edges, **kwargs)
+            else:
+                states, ys = _scan_cohort_sharded(mesh, prob, states, **kwargs)
+        h, cost, capped, served = ys[:4]
+        for k, slab in enumerate(ys[4:]):
+            stream_chunks[k].append(np.asarray(slab))
         carry = states[:5]
         rm, rt = np.asarray(states[5]), np.asarray(states[6])
         g0 = t0 - age_cap  # global source slot of the slab's first column
@@ -865,6 +915,7 @@ def _run_chunked_cohort(
         np.concatenate(costs, axis=1),
         capped_tot,
         served_tot,
+        [np.concatenate(chunks, axis=1) for chunks in stream_chunks],
     )
 
 
@@ -885,6 +936,7 @@ def _run_cohort_fused_impl(
     slots_per_launch: int = 1,  # megakernel: slots fused per kernel launch (DESIGN.md §12)
     sharded: bool = False,  # shard the scan over an instance mesh (DESIGN.md §13)
     mesh=None,  # explicit mesh override (tests/benchmarks); implies sharded
+    metrics=None,  # MetricsSpec | None — in-scan metric streams (DESIGN.md §14)
 ) -> CohortResult:
     """Fused cohort engine implementation behind ``simulate(EngineSpec)``.
 
@@ -930,19 +982,37 @@ def _run_cohort_fused_impl(
     cpt = _compact(topo)
     mask = _stream_mask(topo)
     act, pred, nxt, q_rem0 = _prep_streams(actual, predicted, T, W, cpt, mask)
-    resp_mass, resp_time, backlog, cost, capped, served = _run_chunked_cohort(
+    resp_mass, resp_time, backlog, cost, capped, served, streams = _run_chunked_cohort(
         prob, _device_inputs(topo, net, cpt, service), cpt,
         cfg.scheduler, cfg.use_pallas, age_cap, topo.n_components,
         True, act, pred, nxt, q_rem0, [cfg.V], [cfg.beta],
         host_trace(events, T), True, T, W, chunk, slots_per_launch, mesh=mesh,
+        metrics_spec=metrics,
     )
     weights = np.einsum("sic,ic->cs", act, mask)
     sat = float(capped[0]) / max(float(served[0]), 1e-9)
-    _maybe_warn_saturation(sat, age_cap)
-    return _aggregate(
+    _maybe_warn_saturation(sat, age_cap,
+                           label=f"scheduler={cfg.scheduler} V={cfg.V} W={W}")
+    result = _aggregate(
         resp_mass[0], resp_time[0], weights, _reachability(topo),
         backlog[0], cost[0], sat, float(served[0]),
         T, W, warmup, drain_margin,
+    )
+    if metrics is not None:
+        frame = build_frame(
+            metrics, [s[0] for s in streams], n_slots=T,
+            payload_floats=_fused_payload_floats(topo, net, age_cap, W, mesh),
+        )
+        result = dataclasses.replace(result, metrics=frame)
+    return result
+
+
+def _fused_payload_floats(topo, net, age_cap, W, mesh) -> int:
+    """Per-slot cross-device payload of this run, for the ``payload`` stream."""
+    n_shards = 1 if mesh is None else mesh.shape[COHORT_AXIS]
+    return cohort_slot_payload_floats(
+        topo.n_instances, topo.n_components, net.U.shape[0],
+        age_cap + W + 1, n_shards,
     )
 
 
@@ -973,6 +1043,7 @@ def run_fused_sweep(
     service=None,  # (I,) | scalar — per-tuple service time in mu units (DESIGN.md §10)
     chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
     slots_per_launch: int = 1,  # megakernel: slots fused per kernel launch (DESIGN.md §12)
+    metrics=None,  # MetricsSpec | None — per-scenario metric streams (DESIGN.md §14)
 ) -> tuple[list[CohortResult], int]:
     """Run a whole :class:`repro.core.sweep.SweepSpec` grid on the fused
     engine: scenarios partition by (scheduler, window, use_pallas, and
@@ -1043,17 +1114,30 @@ def run_fused_sweep(
                 [getattr(scn, "events", "none") for scn in group],
                 [trace_of(scn) for scn in group], T,
             )
-        resp_mass, resp_time, backlog, cost, capped, served = _run_chunked_cohort(
+        resp_mass, resp_time, backlog, cost, capped, served, streams = _run_chunked_cohort(
             prob_for(scheduler), dev, cpt, scheduler, use_pallas, age_cap,
             topo.n_components, shared, act_s, pred_s, nxt_s, q0_s,
             [scn.V for scn in group], [scn.beta for scn in group],
             ev_host, ev_shared, T, W, chunk, slots_per_launch, mesh=mesh,
+            metrics_spec=metrics,
         )
         for s, scn in enumerate(group):
             sat = float(capped[s]) / max(float(served[s]), 1e-9)
-            _maybe_warn_saturation(sat, age_cap)
-            results[scn.index] = _aggregate(
+            _maybe_warn_saturation(
+                sat, age_cap,
+                label=(f"scheduler={scheduler} V={scn.V} W={W} "
+                       f"arrival={scn.arrival} "
+                       f"events={getattr(scn, 'events', 'none')}"),
+            )
+            result = _aggregate(
                 resp_mass[s], resp_time[s], weights_s[0 if shared else s], reach,
                 backlog[s], cost[s], sat, float(served[s]), T, W, warmup, drain_margin,
             )
+            if metrics is not None:
+                frame = build_frame(
+                    metrics, [slab[s] for slab in streams], n_slots=T,
+                    payload_floats=_fused_payload_floats(topo, net, age_cap, W, mesh),
+                )
+                result = dataclasses.replace(result, metrics=frame)
+            results[scn.index] = result
     return results, len(groups)

@@ -65,6 +65,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import compute_scan_streams, scan_stream_names
+
 from .potus import _fill_components
 
 __all__ = [
@@ -468,6 +470,7 @@ def compact_slot_step(
     kernel_safe: bool = False,
     axis: str | None = None,
     n_shards: int = 1,
+    metrics_spec=None,
 ):
     """One slot of the cohort dynamics (stages 1-5 of DESIGN.md §8) with the
     compact one-dispatch decision — no (I, I) tensor anywhere. Mirrors
@@ -635,4 +638,36 @@ def compact_slot_step(
 
     state = (q_rem, admit, shift(q_in_tag), shift(q_out_tag), shift(land),
              resp_mass, resp_time)
-    return state, (backlog, cost, capped_served, term_served)
+    out = (backlog, cost, capped_served, term_served)
+    if metrics_spec is not None:
+        # §14 metric streams ride as extra scan outputs. Under sharding the
+        # (I,)-vector inputs are all-gathered so every shard emits the same
+        # replicated global row (the quantile/sort reductions need the full
+        # vector); scalars fold with psum. Never on the kernel path — the
+        # engine gates metrics off it (collectives cannot lower into Pallas).
+        landed = land.sum(-1)
+        price = c.V * c.U.mean(axis=0)[c.inst_cont] + q_in_arr
+        comp_backlog = jnp.einsum("i,ic->c", q_in_arr, c.comp_onehot)
+        held = admit.sum()
+        dropped = (r * (pred_m - tp)).sum()
+        tp_s, fp_s, tn_s = tp.sum(), (pred_m - tp).sum(), tn.sum()
+        if axis is not None:
+            q_in_g = jax.lax.all_gather(q_in_arr, axis, tiled=True)
+            price_g = jax.lax.all_gather(price, axis, tiled=True)
+            landed_g = jax.lax.all_gather(landed, axis, tiled=True)
+            comp_backlog = jax.lax.psum(comp_backlog, axis)
+            held = jax.lax.psum(held, axis)
+            dropped = jax.lax.psum(dropped, axis)
+            tp_s = jax.lax.psum(tp_s, axis)
+            fp_s = jax.lax.psum(fp_s, axis)
+            tn_s = jax.lax.psum(tn_s, axis)
+        else:
+            q_in_g, price_g, landed_g = q_in_arr, price, landed
+        ctx = {
+            "h": backlog, "q_in": q_in_g, "price": price_g, "landed": landed_g,
+            "transit_total": landed_g.sum(), "comp_backlog": comp_backlog,
+            "held": held, "dropped": dropped, "tp": tp_s, "fp": fp_s, "tn": tn_s,
+            "capped": capped_served, "served": term_served,
+        }
+        out = out + compute_scan_streams(scan_stream_names(metrics_spec), ctx)
+    return state, out

@@ -35,7 +35,7 @@ import dataclasses
 from typing import Any
 
 __all__ = ["EngineSpec", "UnsupportedEngineOption", "simulate", "ENGINES",
-           "OPTION_SUPPORT"]
+           "OPTION_SUPPORT", "check_metrics_spec"]
 
 #: engines :func:`simulate` dispatches to
 ENGINES = ("jax", "sharded", "cohort", "cohort-fused")
@@ -56,6 +56,9 @@ OPTION_SUPPORT = {
     # engine="sharded" *is* sharded; on cohort-fused the flag shards the
     # compact scan over the instance mesh (DESIGN.md §13)
     "sharded": ("sharded", "cohort-fused"),
+    # every engine takes metrics=; *stream* availability is finer-grained
+    # (obs.ENGINE_STREAMS) and checked by check_metrics_spec (DESIGN.md §14)
+    "metrics": ("jax", "sharded", "cohort", "cohort-fused"),
 }
 
 #: proximity order used to name the "nearest" supporting engine: the scan
@@ -101,6 +104,24 @@ def check_engine_option(engine: str, option: str) -> None:
         raise UnsupportedEngineOption(engine, option, supported)
 
 
+def check_metrics_spec(engine: str, metrics):
+    """Coerce ``EngineSpec(metrics=...)`` to a ``MetricsSpec`` (or None) and
+    reject streams the engine cannot compute in-graph, with the same
+    normalized error shape as a whole unsupported option (shared with
+    ``run_sweep``)."""
+    from repro.obs.metrics import MetricsSpec, stream_engines, unsupported_streams
+
+    spec = MetricsSpec.coerce(metrics)
+    if spec is None:
+        return None
+    bad = unsupported_streams(engine, spec)
+    if bad:
+        raise UnsupportedEngineOption(
+            engine, f"metrics[{bad[0]}]", supported=stream_engines(bad[0]),
+            reason=f"stream {bad[0]!r} needs engine state {engine!r} lacks")
+    return spec
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """One run, fully specified — the argument to :func:`simulate`.
@@ -134,6 +155,7 @@ class EngineSpec:
     age_cap: int = 64
     slots_per_launch: int = 1  # megakernel slots per launch (DESIGN.md §12)
     sharded: bool = False  # shard cohort-fused over the instance mesh (DESIGN.md §13)
+    metrics: Any = None  # MetricsSpec | stream names | True (DESIGN.md §14)
 
     def config(self):
         """The legacy :class:`~repro.core.simulator.SimConfig` equivalent."""
@@ -173,19 +195,20 @@ def simulate(spec: EngineSpec):
     """
     spec.validate()
     cfg = spec.config()
+    metrics = check_metrics_spec(spec.engine, spec.metrics)
     if spec.engine in ("jax", "sharded"):
         from .simulator import _run_sim_impl
 
         return _run_sim_impl(spec.topo, spec.net, spec.placement, spec.arrivals,
                              spec.T, cfg, mu=spec.mu, events=spec.events,
-                             chunk=spec.chunk)
+                             chunk=spec.chunk, metrics=metrics)
     if spec.engine == "cohort":
         from .cohort import _run_cohort_sim_impl
 
         return _run_cohort_sim_impl(
             spec.topo, spec.net, spec.placement, spec.arrivals, spec.predicted,
             spec.T, cfg, warmup=spec.warmup, drain_margin=spec.drain_margin,
-            events=spec.events,
+            events=spec.events, metrics=metrics,
         )
     from .cohort_fused import _run_cohort_fused_impl
 
@@ -194,5 +217,5 @@ def simulate(spec: EngineSpec):
         spec.T, cfg, warmup=spec.warmup, drain_margin=spec.drain_margin,
         age_cap=spec.age_cap, events=spec.events, service=spec.service,
         chunk=spec.chunk, slots_per_launch=spec.slots_per_launch,
-        sharded=spec.sharded,
+        sharded=spec.sharded, metrics=metrics,
     )

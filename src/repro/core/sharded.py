@@ -47,6 +47,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.context import shard_map_compat
+from repro.obs.metrics import build_frame, compute_scan_streams, scan_stream_names
+from repro.obs.trace import span as obs_span
 
 from .network import NetworkCosts
 from .potus import (
@@ -277,8 +279,14 @@ def sharded_schedule_batch(
 
 
 def _local_sim_step(prob, U, mu, selectivity_rows, V, beta, state, new_arr,
-                    mu_row=None, gamma_row=None, alive_full=None, *, method):
-    """One slot of the §3 dynamics on this shard's rows (cf. ``sim_step``)."""
+                    mu_row=None, gamma_row=None, alive_full=None, *, method,
+                    metrics_spec=None):
+    """One slot of the §3 dynamics on this shard's rows (cf. ``sim_step``).
+
+    With ``metrics_spec`` the obs streams are computed from *global*
+    quantities (the already-gathered ``q_in_full`` and psum'd column sums),
+    so every shard emits the identical replicated rows — the streams match
+    the dense engine bitwise on a 1-shard mesh and elementwise on many."""
     n_local = state.q_in.shape[0]
     if alive_full is None:
         caps = None
@@ -310,10 +318,21 @@ def _local_sim_step(prob, U, mu, selectivity_rows, V, beta, state, new_arr,
         jax.lax.psum(q_out.sum(), _AXIS),
         jax.lax.psum(info["served"].sum(), _AXIS),
     )
+    if metrics_spec is not None:
+        ctx = {
+            "h": h,
+            "q_in": q_in_full,
+            "price": V * U.mean(axis=0)[prob.inst_container] + q_in_full,
+            "landed": col_sums,
+            "transit_total": jax.lax.psum(new_state.transit.sum(), _AXIS),
+            "comp_backlog": jnp.zeros(prob.n_components, jnp.float32)
+            .at[prob.inst_comp].add(q_in_full),
+        }
+        metrics = metrics + compute_scan_streams(scan_stream_names(metrics_spec), ctx)
     return new_state, metrics
 
 
-@partial(jax.jit, static_argnames=("mesh", "method"))
+@partial(jax.jit, static_argnames=("mesh", "method", "metrics_spec"))
 def _scan_sim_sharded(
     mesh: Mesh,
     prob: SchedProblem,
@@ -326,6 +345,7 @@ def _scan_sim_sharded(
     beta: float,
     events=None,  # (mu_t, gamma_t, alive_t) triple of (T, I), or None
     method: str = "sort",
+    metrics_spec=None,
 ):
     base_specs = (
         _prob_specs(prob), P(None, None), P(_AXIS), P(_AXIS, None), P(), P(),
@@ -334,11 +354,14 @@ def _scan_sim_sharded(
     # per-slot capacity rows shard with the rows; liveness is replicated
     # (every shard masks the full column set — DESIGN.md §9)
     ev_specs = () if events is None else (P(_AXIS), P(_AXIS), P(None))
+    # obs streams are (width,) rows computed from global values: replicated
+    n_streams = 0 if metrics_spec is None else len(scan_stream_names(metrics_spec))
+    met_specs = (P(), P(), P(), P(), P()) + (P(None),) * n_streams
     step = shard_map_compat(
-        partial(_local_sim_step, method=method),
+        partial(_local_sim_step, method=method, metrics_spec=metrics_spec),
         mesh=mesh,
         in_specs=base_specs + ev_specs,
-        out_specs=(_STATE_SPECS, (P(), P(), P(), P(), P())),
+        out_specs=(_STATE_SPECS, met_specs),
     )
 
     def body(state, xs):
@@ -349,8 +372,8 @@ def _scan_sim_sharded(
                     mu_row, gamma_row, alive_row)
 
     xs = arrivals if events is None else (arrivals, events)
-    final, (h, cost, qi, qo, served) = jax.lax.scan(body, state0, xs)
-    return final, h, cost, qi, qo, served
+    final, ys = jax.lax.scan(body, state0, xs)
+    return final, ys
 
 
 def run_sim_sharded(
@@ -363,6 +386,7 @@ def run_sim_sharded(
     mu: np.ndarray | None = None,
     mesh: Mesh | None = None,
     events=None,  # EventTrace | None — disruption trace (DESIGN.md §9)
+    metrics=None,  # MetricsSpec | None — selected obs streams (DESIGN.md §14)
 ):
     """Plain-jax engine semantics on an instance-partitioned mesh (DESIGN.md §7)."""
     from .simulator import SimResult, _check_mu_override, pad_arrivals  # local import: avoid cycle
@@ -403,10 +427,22 @@ def run_sim_sharded(
             jax.device_put(gamma_t, named(mesh, P(None, _AXIS))),
             jax.device_put(alive_t, named(mesh, P(None, None))),
         )
-    final, h, cost, qi, qo, served = _scan_sim_sharded(
-        mesh, prob, state0, window_stream, jnp.asarray(net.U), mu_arr, sel_rows,
-        float(cfg.V), float(cfg.beta), events=ev, method=method,
-    )
+    with obs_span("potus/sharded/scan", T=T, n_shards=int(mesh.shape[_AXIS])):
+        final, ys = _scan_sim_sharded(
+            mesh, prob, state0, window_stream, jnp.asarray(net.U), mu_arr, sel_rows,
+            float(cfg.V), float(cfg.beta), events=ev, method=method,
+            metrics_spec=metrics,
+        )
+    h, cost, qi, qo, served = ys[:5]
+    frame = None
+    if metrics is not None:
+        # per-slot collective payload: the q_in all_gather + landing psum
+        # (I floats each) plus the five psum'd scalar reductions; 0 on one
+        # shard where every collective is the identity
+        n_shards = int(mesh.shape[_AXIS])
+        payload = 2 * topo.n_instances + 5 if n_shards > 1 else 0
+        frame = build_frame(metrics, [np.asarray(a) for a in ys[5:]],
+                            n_slots=T, payload_floats=payload)
     return SimResult(
         backlog=np.asarray(h),
         comm_cost=np.asarray(cost),
@@ -414,4 +450,5 @@ def run_sim_sharded(
         q_out_total=np.asarray(qo),
         served_total=np.asarray(served),
         final_state=jax.device_get(final),
+        metrics=frame,
     )

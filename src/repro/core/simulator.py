@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsFrame, MetricsSpec, build_frame, compute_scan_streams, scan_stream_names
+from repro.obs.trace import span as obs_span
+
 from .events import EventTrace
 from .network import NetworkCosts
 from .potus import SchedProblem, SlotCaps, caps_for_slot, hold_mask_for, make_problem, potus_schedule
@@ -115,6 +118,7 @@ class SimResult:
     q_out_total: np.ndarray  # (T,)
     served_total: np.ndarray  # (T,)
     final_state: SimState
+    metrics: MetricsFrame | None = None  # selected obs streams (DESIGN.md §14)
 
     @property
     def avg_backlog(self) -> float:
@@ -155,6 +159,7 @@ def sim_step(
     state: SimState,
     new_arr: jax.Array,  # (I, C) — λ(t + W + 1) entering the window
     caps: SlotCaps | None = None,  # one slot of a disruption trace (DESIGN.md §9)
+    metrics_spec: MetricsSpec | None = None,  # extra per-slot streams (DESIGN.md §14)
 ) -> tuple[SimState, tuple[jax.Array, ...]]:
     """One slot of the paper-§3 dynamics: observe, schedule, update.
 
@@ -163,6 +168,10 @@ def sim_step(
     ``vmap``-ed over a scenario axis. With ``caps`` the scheduler prices
     dead instances out, service runs at the slot's effective ``mu``, and
     unshippable mandatory arrivals are held (never dropped).
+
+    ``metrics_spec`` (static) appends one ``(width,)`` row per selected obs
+    stream to the per-slot outputs; with ``None`` the returned tuple — and
+    the compiled program — is exactly the pre-observability one.
     """
     q_out = effective_qout(prob, state)
     must_send = state.q_rem[:, :, 0]
@@ -174,10 +183,22 @@ def sim_step(
     new_state, info = slot_update(prob, state, X, new_arr, mu_eff, selectivity_rows,
                                   hold_mask=hold)
     metrics = (h, cost, state.q_in.sum(), q_out.sum(), info["served"].sum())
+    if metrics_spec is not None:
+        ctx = {
+            "h": h,
+            "q_in": state.q_in,
+            "price": V * U.mean(axis=0)[prob.inst_container] + state.q_in,
+            "landed": X.sum(axis=0),
+            "transit_total": new_state.transit.sum(),
+            "comp_backlog": jnp.zeros(prob.n_components, jnp.float32)
+            .at[prob.inst_comp].add(state.q_in),
+        }
+        metrics = metrics + compute_scan_streams(scan_stream_names(metrics_spec), ctx)
     return new_state, metrics
 
 
-@partial(jax.jit, static_argnames=("scheduler", "use_pallas"), donate_argnames=("state0",))
+@partial(jax.jit, static_argnames=("scheduler", "use_pallas", "metrics_spec"),
+         donate_argnames=("state0",))
 def _scan_sim(
     prob: SchedProblem,
     state0: SimState,
@@ -190,6 +211,7 @@ def _scan_sim(
     events=None,  # (mu_t, gamma_t, alive_t) triple of (T, I), or None
     scheduler: str = "potus",
     use_pallas: bool = False,
+    metrics_spec: MetricsSpec | None = None,
 ):
     sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
@@ -201,11 +223,11 @@ def _scan_sim(
             new_arr, (mu_row, gamma_row, alive_row) = xs
             caps = caps_for_slot(mu_row, gamma_row, alive_row)
         return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta,
-                        state, new_arr, caps=caps)
+                        state, new_arr, caps=caps, metrics_spec=metrics_spec)
 
     xs = arrivals if events is None else (arrivals, events)
-    final, (h, cost, qi, qo, served) = jax.lax.scan(step, state0, xs)
-    return final, h, cost, qi, qo, served
+    final, ys = jax.lax.scan(step, state0, xs)
+    return final, ys
 
 
 def materialize_arrivals(arrivals, topo: Topology, n_slots: int) -> np.ndarray:
@@ -228,18 +250,20 @@ def _run_sim_impl(
     mu: np.ndarray | None = None,
     events: EventTrace | None = None,  # disruption trace (core.events, DESIGN.md §9)
     chunk: int | None = None,  # streaming scan: device slots per chunk (DESIGN.md §11.2)
+    metrics: MetricsSpec | None = None,  # selected obs streams (DESIGN.md §14)
 ) -> SimResult:
     from .engine import UnsupportedEngineOption
 
     _check_mu_override(mu, events)
-    arrivals = materialize_arrivals(arrivals, topo, T + cfg.window + 1)
+    with obs_span("potus/jax/problem-build", T=T, engine="sharded" if cfg.sharded else "jax"):
+        arrivals = materialize_arrivals(arrivals, topo, T + cfg.window + 1)
     if cfg.sharded:
         if cfg.use_pallas:
             raise UnsupportedEngineOption("sharded", "use_pallas")
         if chunk is not None:
             raise UnsupportedEngineOption("sharded", "chunk")
         return run_sim_sharded(topo, net, inst_container, arrivals, T, cfg, mu=mu,
-                               events=events)
+                               events=events, metrics=metrics)
     if chunk is not None and chunk <= 0:
         raise ValueError(f"chunk must be a positive slot count, got {chunk}")
     W = cfg.window
@@ -256,26 +280,33 @@ def _run_sim_impl(
     U = jnp.asarray(net.U)
 
     tc = T if chunk is None else int(chunk)
-    outs: list[list[np.ndarray]] = [[], [], [], [], []]
+    n_streams = 0 if metrics is None else len(scan_stream_names(metrics))
+    outs: list[list[np.ndarray]] = [[] for _ in range(5 + n_streams)]
     for t0 in range(0, T, tc) or [0]:
         t1 = min(t0 + tc, T)
         ev_c = None if ev_host is None else tuple(jnp.asarray(e[t0:t1]) for e in ev_host)
-        state, *per_slot = _scan_sim(
-            prob,
-            state,
-            jnp.asarray(window_stream[t0:t1]),
-            U,
-            mu_arr,
-            sel_rows,
-            float(cfg.V),
-            float(cfg.beta),
-            events=ev_c,
-            scheduler=cfg.scheduler,
-            use_pallas=cfg.use_pallas,
-        )
+        with obs_span("potus/jax/chunk", t0=t0, t1=t1):
+            state, per_slot = _scan_sim(
+                prob,
+                state,
+                jnp.asarray(window_stream[t0:t1]),
+                U,
+                mu_arr,
+                sel_rows,
+                float(cfg.V),
+                float(cfg.beta),
+                events=ev_c,
+                scheduler=cfg.scheduler,
+                use_pallas=cfg.use_pallas,
+                metrics_spec=metrics,
+            )
         for acc, piece in zip(outs, per_slot):
             acc.append(np.asarray(piece))
-    h, cost, qi, qo, served = (np.concatenate(a) for a in outs)
+    h, cost, qi, qo, served = (np.concatenate(a) for a in outs[:5])
+    frame = None
+    if metrics is not None:
+        frame = build_frame(metrics, [np.concatenate(a) for a in outs[5:]],
+                            n_slots=T, payload_floats=0.0)
     return SimResult(
         backlog=h,
         comm_cost=cost,
@@ -283,4 +314,5 @@ def _run_sim_impl(
         q_out_total=qo,
         served_total=served,
         final_state=jax.device_get(state),
+        metrics=frame,
     )

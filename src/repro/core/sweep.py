@@ -36,7 +36,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import OPTION_SUPPORT, UnsupportedEngineOption, check_engine_option
+from repro.obs.metrics import build_frame, scan_stream_names
+
+from .engine import (
+    OPTION_SUPPORT,
+    UnsupportedEngineOption,
+    check_engine_option,
+    check_metrics_spec,
+)
 from .events import EventTrace, FleetScenario
 from .network import NetworkCosts
 from .potus import caps_for_slot, make_problem
@@ -170,7 +177,8 @@ class SweepResult:
 
 
 @partial(jax.jit, static_argnames=("scheduler", "use_pallas", "shared_inputs",
-                                   "events_shared"), donate_argnames=("states0",))
+                                   "events_shared", "metrics_spec"),
+         donate_argnames=("states0",))
 def _scan_sweep(
     prob,
     states0,  # SimState pytree, leading scenario axis S (always batched)
@@ -185,6 +193,7 @@ def _scan_sweep(
     use_pallas: bool = False,
     shared_inputs: bool = False,
     events_shared: bool = False,
+    metrics_spec=None,  # static MetricsSpec | None (DESIGN.md §14)
 ):
     sched = _get_scheduler(scheduler, use_pallas)
     u_pair = U[prob.inst_container[:, None], prob.inst_container[None, :]]
@@ -197,7 +206,7 @@ def _scan_sweep(
                 new_arr, (mu_row, gamma_row, alive_row) = xs
                 caps = caps_for_slot(mu_row, gamma_row, alive_row)
             return sim_step(prob, sched, U, u_pair, mu, selectivity_rows, V, beta,
-                            state, new_arr, caps=caps)
+                            state, new_arr, caps=caps, metrics_spec=metrics_spec)
 
         xs = stream if ev is None else (stream, ev)
         return jax.lax.scan(step, state0, xs)
@@ -292,6 +301,13 @@ def run_sweep(
     chunk = (engine_opts or {}).get("chunk")
     if chunk is not None and (not isinstance(chunk, (int, np.integer)) or chunk <= 0):
         raise ValueError(f"engine_opts['chunk'] must be a positive slot count, got {chunk!r}")
+    # engine_opts["metrics"] selects in-scan metric streams for every
+    # scenario (DESIGN.md §14); stream availability is engine-checked with
+    # the same normalized error as a whole unsupported option
+    metrics_spec = check_metrics_spec(
+        engine if engine != "jax" or not spec.sharded else "sharded",
+        (engine_opts or {}).get("metrics"),
+    )
 
     if engine in ("cohort", "cohort-fused"):
         if mu is not None:
@@ -301,11 +317,13 @@ def run_sweep(
             # which shards every partition's vmapped scan (DESIGN.md §13)
             raise UnsupportedEngineOption(engine, "sharded")
         opts = dict(engine_opts or {})
+        opts.pop("metrics", None)  # already coerced to metrics_spec above
         if engine == "cohort-fused":
             from .cohort_fused import run_fused_sweep
 
             results, n_batches = run_fused_sweep(
-                topo, net, inst_container, arr_map, T, spec, events_map=ev_map, **opts
+                topo, net, inst_container, arr_map, T, spec, events_map=ev_map,
+                metrics=metrics_spec, **opts
             )
             return SweepResult(spec, scenarios, results, n_batches=n_batches)
         from .cohort import _run_cohort_sim_impl
@@ -326,7 +344,7 @@ def run_sweep(
             results.append(
                 _run_cohort_sim_impl(topo, net, inst_container, actual, predicted,
                                      T, scn.config(), events=ev_map[scn.events],
-                                     **opts)
+                                     metrics=metrics_spec, **opts)
             )
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
     if engine != "jax":
@@ -352,7 +370,8 @@ def run_sweep(
         # scenarios, not wide grids) — run the grid sequentially (DESIGN.md §7)
         results = [
             _run_sim_impl(topo, net, inst_container, arr_map[scn.arrival][0], T,
-                          scn.config(), mu=mu, events=ev_map[scn.events])
+                          scn.config(), mu=mu, events=ev_map[scn.events],
+                          metrics=metrics_spec)
             for scn in scenarios
         ]
         return SweepResult(spec, scenarios, results, n_batches=len(scenarios))
@@ -400,7 +419,9 @@ def run_sweep(
             )
 
         tc = T if chunk is None else int(chunk)
-        outs: list[list[np.ndarray]] = [[], [], [], [], []]
+        n_streams = (0 if metrics_spec is None
+                     else len(scan_stream_names(metrics_spec)))
+        outs: list[list[np.ndarray]] = [[] for _ in range(5 + n_streams)]
         for t0 in range(0, T, tc) or [0]:
             t1 = min(t0 + tc, T)
             stream_c = jnp.asarray(streams[t0:t1] if shared else streams[:, t0:t1])
@@ -409,16 +430,22 @@ def run_sweep(
                 ev_c = tuple(
                     jnp.asarray(e[t0:t1] if ev_shared else e[:, t0:t1]) for e in ev_host
                 )
-            states, (h, cost, qi, qo, served) = _scan_sweep(
+            states, per_slot = _scan_sweep(
                 prob, states, stream_c, U, mu_arr, sel_rows, Vs, betas,
                 events_s=ev_c, events_shared=ev_shared,
                 scheduler=scheduler, use_pallas=use_pallas, shared_inputs=shared,
+                metrics_spec=metrics_spec,
             )
-            for acc, piece in zip(outs, (h, cost, qi, qo, served)):
+            for acc, piece in zip(outs, per_slot):
                 acc.append(np.asarray(piece))
-        h, cost, qi, qo, served = (np.concatenate(a, axis=1) for a in outs)
+        h, cost, qi, qo, served = (np.concatenate(a, axis=1) for a in outs[:5])
+        met_arrays = [np.concatenate(a, axis=1) for a in outs[5:]]  # (S, T, w)
         final = jax.device_get(states)
         for s, scn in enumerate(group):
+            frame = None
+            if metrics_spec is not None:
+                frame = build_frame(metrics_spec, [a[s] for a in met_arrays],
+                                    n_slots=T, payload_floats=0.0)
             results[scn.index] = SimResult(
                 backlog=h[s],
                 comm_cost=cost[s],
@@ -426,5 +453,6 @@ def run_sweep(
                 q_out_total=qo[s],
                 served_total=served[s],
                 final_state=jax.tree_util.tree_map(lambda x: x[s], final),
+                metrics=frame,
             )
     return SweepResult(spec, scenarios, results, n_batches=len(groups))

@@ -47,6 +47,7 @@ from repro.core.network import NetworkCosts
 from repro.core.potus import caps_for_slot, make_problem
 from repro.core.simulator import _get_scheduler
 from repro.core.topology import Component, build_topology
+from repro.obs.trace import span as obs_span
 
 __all__ = ["DispatcherConfig", "PotusDispatcher", "integral_assign"]
 
@@ -107,6 +108,7 @@ class PotusDispatcher:
         host_costs: np.ndarray,  # (n_hosts, n_hosts) per-request transfer cost
         replica_rates: np.ndarray,  # (R,) service capacity, in Q_in units/slot
         cfg: DispatcherConfig = DispatcherConfig(),
+        recorder=None,  # obs.FlightRecorder — per-slot routing rows (DESIGN.md §14)
     ):
         R = len(replica_hosts)
         F = n_frontends
@@ -159,6 +161,7 @@ class PotusDispatcher:
         self.h_last = 0.0  # drift backlog h(t) = sum Q_in + beta * sum Q_out
         self.h_history: list[float] = []
         self._u_pair = self.net.U[np.ix_(placement, placement)]
+        self.recorder = recorder
 
     def observe_prediction(self, predicted: np.ndarray) -> None:
         """predicted: (F, window+1) request counts for slots t..t+W."""
@@ -203,38 +206,40 @@ class PotusDispatcher:
             if events_row is not None:
                 caps_b = tuple(jnp.asarray(a, jnp.float32)[None] for a in events_row)
             method = "sort" if self.cfg.scheduler == "potus" and self.cfg.method == "sort" else "loop"
-            X = np.asarray(
-                sharded_schedule_batch(
-                    self._mesh,
-                    self.prob,
-                    self._U,
-                    jnp.asarray(q_in)[None],
-                    jnp.asarray(q_out)[None],
-                    jnp.asarray(must)[None],
-                    float(self.cfg.V),
-                    float(self.cfg.beta),
-                    method=method,
-                    caps=caps_b,
-                )
-            )[0]
+            with obs_span("potus/serving/scheduler-call", sharded=True):
+                X = np.asarray(
+                    sharded_schedule_batch(
+                        self._mesh,
+                        self.prob,
+                        self._U,
+                        jnp.asarray(q_in)[None],
+                        jnp.asarray(q_out)[None],
+                        jnp.asarray(must)[None],
+                        float(self.cfg.V),
+                        float(self.cfg.beta),
+                        method=method,
+                        caps=caps_b,
+                    )
+                )[0]
         else:
             caps = None
             if events_row is not None:
                 mu_row, gamma_row, alive_row = (jnp.asarray(a, jnp.float32) for a in events_row)
                 caps = caps_for_slot(mu_row, gamma_row, alive_row)
 
-            X = np.asarray(
-                self._sched(
-                    self.prob,
-                    self._U,
-                    jnp.asarray(q_in),
-                    jnp.asarray(q_out),
-                    jnp.asarray(must),
-                    float(self.cfg.V),
-                    float(self.cfg.beta),
-                    caps=caps,
+            with obs_span("potus/serving/scheduler-call", sharded=False):
+                X = np.asarray(
+                    self._sched(
+                        self.prob,
+                        self._U,
+                        jnp.asarray(q_in),
+                        jnp.asarray(q_out),
+                        jnp.asarray(must),
+                        float(self.cfg.V),
+                        float(self.cfg.beta),
+                        caps=caps,
+                    )
                 )
-            )
         self.h_last = float(q_in.sum() + self.cfg.beta * q_out.sum())
         self.h_history.append(self.h_last)
         self.comm_cost_total += float((X * self._u_pair).sum())
@@ -254,4 +259,13 @@ class PotusDispatcher:
         self.pending += self.window[:, 0]
         self.window[:, :-1] = self.window[:, 1:]
         self.window[:, -1] = 0.0
+        if self.recorder is not None:
+            self.recorder.record(
+                slot=len(self.h_history) - 1,
+                h=self.h_last,
+                shipped=float(assign.sum()),
+                pending=float(self.pending.sum()),
+                window=float(self.window.sum()),
+                comm_cost_total=self.comm_cost_total,
+            )
         return assign

@@ -120,11 +120,12 @@ class ReplicaFleet:
     the in-graph engines observe before landing their ``transit`` buffer.
     """
 
-    def __init__(self, replicas: list):
+    def __init__(self, replicas: list, recorder=None):
         self.replicas = list(replicas)
         R = len(self.replicas)
         self._inflight: list[list] = [[] for _ in range(R)]  # lands at next step()
         self._dispatched: list[list] = [[] for _ in range(R)]  # this slot's routing
+        self.recorder = recorder  # obs.FlightRecorder — per-slot fleet rows
 
     @classmethod
     def from_model(cls, cfg, params, service_rates, max_batch: int = 4,
@@ -187,4 +188,14 @@ class ReplicaFleet:
             except TypeError:  # model-backed ServingEngine has no slot stamp
                 out = eng.step(rate=rate)
             done.extend(out)
+        if self.recorder is not None:
+            backlogs = self.backlog_tokens
+            self.recorder.record(
+                slot=t,
+                backlog_tokens=float(backlogs.sum()),
+                backlog_max=float(backlogs.max()) if len(backlogs) else 0.0,
+                inflight=sum(len(q) for q in self._inflight),
+                completed=len(done),
+                tokens_served=self.tokens_served,
+            )
         return done

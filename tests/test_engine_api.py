@@ -52,6 +52,7 @@ _SET_VALUES = {
     "age_cap": 32,
     "slots_per_launch": 4,
     "sharded": True,
+    "metrics": True,
 }
 
 

@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Benchmark regression diff: fresh ``BENCH_*.json`` vs a committed snapshot.
+
+Matches rows of two ``repro-bench/v2`` dumps on their identity columns
+(section, engine, scheduler, scenario, I, and W / n_shards when present) and
+compares **per-slot** wall time (``wall_s / T``), so a smoke run at T=40 can
+be diffed against the committed T=128/300 snapshots. A row regresses when
+
+    fresh_wall_per_slot > tol * baseline_wall_per_slot
+
+Rows present on only one side are *reported*, never failed — benchmarks gain
+sections across PRs, and a smoke run covers a subset. Exit code is 1 only on
+a wall-time regression, so CI can gate on it with a loose ``--tol`` (shared
+runners are noisy; the default 1.5 catches order-of-magnitude cliffs, not
+scheduler jitter).
+
+Dependency-free (stdlib only)::
+
+    python tools/bench_diff.py BENCH_cohort.json /tmp/fresh/BENCH_cohort.json
+    python tools/bench_diff.py baseline.json fresh.json --tol 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "repro-bench/v2"
+
+#: identity columns, in display order; absent keys simply don't partition
+KEY_FIELDS = ("section", "engine", "scheduler", "scenario", "I", "W", "n_shards")
+
+
+def _load_rows(path: str) -> list[dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != SCHEMA:
+        raise SystemExit(
+            f"FAIL: {path} has schema {payload.get('schema')!r}, expected {SCHEMA!r}")
+    return payload["rows"]
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((k, row[k]) for k in KEY_FIELDS if k in row)
+
+
+def _fmt_key(key: tuple) -> str:
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def wall_per_slot(row: dict) -> float | None:
+    wall, T = row.get("wall_s"), row.get("T")
+    if wall is None or not T:
+        return None
+    return float(wall) / float(T)
+
+
+def diff(baseline: list[dict], fresh: list[dict], tol: float) -> tuple[list, list, list]:
+    """Returns (regressions, improvements, unmatched) row descriptions."""
+    base_map: dict[tuple, dict] = {row_key(r): r for r in baseline}
+    fresh_map: dict[tuple, dict] = {row_key(r): r for r in fresh}
+    regressions, improvements, unmatched = [], [], []
+    for key, fr in fresh_map.items():
+        br = base_map.get(key)
+        if br is None:
+            unmatched.append(f"fresh-only: {_fmt_key(key)}")
+            continue
+        b, f = wall_per_slot(br), wall_per_slot(fr)
+        if b is None or f is None or b <= 0:
+            continue
+        ratio = f / b
+        line = (f"{_fmt_key(key)}: {b * 1e3:.3f} -> {f * 1e3:.3f} ms/slot "
+                f"({ratio:.2f}x)")
+        if ratio > tol:
+            regressions.append(line)
+        elif ratio < 1.0 / tol:
+            improvements.append(line)
+    for key in base_map:
+        if key not in fresh_map:
+            unmatched.append(f"baseline-only: {_fmt_key(key)}")
+    return regressions, improvements, unmatched
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed repro-bench/v2 snapshot")
+    ap.add_argument("fresh", help="freshly produced repro-bench/v2 dump")
+    ap.add_argument("--tol", type=float, default=1.5,
+                    help="regression threshold on per-slot wall-time ratio")
+    args = ap.parse_args(argv)
+    if args.tol <= 1.0:
+        ap.error("--tol must be > 1.0 (it is a ratio threshold)")
+
+    regressions, improvements, unmatched = diff(
+        _load_rows(args.baseline), _load_rows(args.fresh), args.tol)
+
+    for line in unmatched:
+        print(f"  note  {line}")
+    for line in improvements:
+        print(f"  fast  {line}")
+    for line in regressions:
+        print(f"  SLOW  {line}")
+    matched = "compared against"
+    print(f"bench_diff: {args.fresh} {matched} {args.baseline} "
+          f"(tol {args.tol:.2f}x): {len(regressions)} regression(s), "
+          f"{len(improvements)} improvement(s), {len(unmatched)} unmatched")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Text dashboard for a ``repro-obs/v1`` metrics dump (DESIGN.md §14).
+
+Reads the JSON written by ``MetricsFrame.save`` (or an engine-result dump)
+and prints, per stream column: min / mean / max and the slot of the peak.
+For the ``backlog`` stream it additionally derives the disruption recovery
+story straight from the streams — peak-backlog slot and the first post-peak
+slot whose backlog is back within ``--recovery-tol`` of the pre-peak mean —
+which is how the BENCH_disruption recovery numbers are reproducible from a
+metrics dump alone (the PR's acceptance check).
+
+Dependency-free (stdlib only) so it runs anywhere the JSON exists::
+
+    python tools/obs_report.py OBS_disruption.json
+    python tools/obs_report.py OBS_disruption.json --stream backlog --recovery
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _column(values: list[list[float]], k: int) -> list[float]:
+    return [row[k] for row in values]
+
+
+def _fmt(x: float) -> str:
+    return f"{x:12.4f}" if abs(x) < 1e6 else f"{x:12.4e}"
+
+
+def stream_table(name: str, columns: list[str], values: list[list[float]]) -> str:
+    lines = [f"stream {name!r}  ({len(values)} slots x {len(columns)} cols)"]
+    lines.append(f"  {'column':<12} {'min':>12} {'mean':>12} {'max':>12} {'peak@':>6}")
+    for k, col in enumerate(columns):
+        xs = _column(values, k)
+        peak = max(range(len(xs)), key=xs.__getitem__)
+        lines.append(
+            f"  {col:<12} {_fmt(min(xs))} {_fmt(sum(xs) / len(xs))} "
+            f"{_fmt(max(xs))} {peak:>6}"
+        )
+    return "\n".join(lines)
+
+
+def recovery_story(h: list[float], tol: float) -> dict:
+    """Peak-backlog slot and recovery slot, from the backlog stream alone.
+
+    ``recovery_slot`` is the first slot after the peak whose backlog is
+    within ``tol`` x the mean backlog over the slots *before* the peak
+    (the undisturbed baseline); -1 when the run never recovers.
+    """
+    peak = max(range(len(h)), key=h.__getitem__)
+    pre = h[:peak] or [h[0]]
+    baseline = sum(pre) / len(pre)
+    recovery = next(
+        (t for t in range(peak + 1, len(h)) if h[t] <= tol * baseline), -1
+    )
+    return {
+        "peak_backlog": h[peak],
+        "peak_backlog_slot": peak,
+        "pre_peak_mean": baseline,
+        "recovery_slot": recovery,
+        "recovery_slots": (recovery - peak) if recovery >= 0 else -1,
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dump", help="repro-obs/v1 JSON file (MetricsFrame.save)")
+    ap.add_argument("--stream", action="append", default=None,
+                    help="only report these streams (repeatable)")
+    ap.add_argument("--recovery", action="store_true",
+                    help="derive the disruption recovery story from 'backlog'")
+    ap.add_argument("--recovery-tol", type=float, default=1.1,
+                    help="recovered when backlog <= tol * pre-peak mean")
+    args = ap.parse_args(argv)
+
+    with open(args.dump) as f:
+        payload = json.load(f)
+    if payload.get("schema") != "repro-obs/v1":
+        print(f"FAIL: {args.dump} has schema {payload.get('schema')!r}, "
+              f"expected 'repro-obs/v1'")
+        return 1
+
+    streams = payload["streams"]
+    wanted = args.stream or sorted(streams)
+    missing = [s for s in wanted if s not in streams]
+    if missing:
+        print(f"FAIL: dump has no stream(s) {missing}; present: {sorted(streams)}")
+        return 1
+
+    print(f"{args.dump}: {payload['n_slots']} slots, "
+          f"streams {sorted(streams)}")
+    for name in wanted:
+        body = streams[name]
+        print()
+        print(stream_table(name, body["columns"], body["values"]))
+
+    if args.recovery:
+        if "backlog" not in streams:
+            print("FAIL: --recovery needs the 'backlog' stream in the dump")
+            return 1
+        h = _column(streams["backlog"]["values"],
+                    streams["backlog"]["columns"].index("h"))
+        story = recovery_story(h, args.recovery_tol)
+        print()
+        print("recovery story (from streams alone):")
+        for k, v in story.items():
+            print(f"  {k:<18} {v}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
